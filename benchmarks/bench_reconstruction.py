@@ -1,0 +1,68 @@
+"""GPU calling-context-tree reconstruction (paper §6.3, Fig. 5).
+
+Correctness on the paper's own example + reconstruction throughput on
+RAJA-perf-shaped inputs (the paper's motivation: a templated dot product
+expands to 25 GPU functions; large kernels produce call graphs of hundreds
+of functions)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.callgraph import CallGraph, reconstruct
+
+
+def fig5() -> dict:
+    nodes = ["A", "B", "C", "D", "E"]
+    edges = {("A", "B"): 0.0, ("A", "C"): 1.0, ("B", "D"): 1.0,
+             ("C", "D"): 3.0, ("D", "E"): 2.0, ("E", "D"): 2.0}
+    samples = {"A": 10.0, "B": 4.0, "C": 6.0, "D": 8.0, "E": 4.0}
+    g = CallGraph(nodes, edges, samples)
+    root = reconstruct(g, roots=["A"])
+    return {
+        "fig5_total_conserved": abs(root.total()
+                                    - sum(samples.values())) < 1e-9,
+        "fig5_scc_found": root.find("SCC{D,E}") is not None,
+    }
+
+
+def synthetic(n_funcs: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    nodes = [f"f{i}" for i in range(n_funcs)]
+    edges = {}
+    for i in range(n_funcs):
+        for _ in range(int(rng.integers(1, 4))):
+            j = int(rng.integers(i + 1, n_funcs + 1))
+            if j < n_funcs:
+                edges[(nodes[i], nodes[j])] = float(rng.integers(0, 8))
+    # sprinkle recursion (SCCs)
+    for _ in range(n_funcs // 20):
+        i = int(rng.integers(1, n_funcs))
+        j = int(rng.integers(0, i))
+        edges[(nodes[i], nodes[j])] = float(rng.integers(1, 4))
+    samples = {n: float(rng.integers(0, 100)) for n in nodes}
+    return CallGraph(nodes, edges, samples)
+
+
+def run():
+    out = fig5()
+    for n in (100, 500):
+        g = synthetic(n)
+        t0 = time.perf_counter()
+        root = reconstruct(g)
+        dt = time.perf_counter() - t0
+        out[f"n{n}_seconds"] = dt
+        out[f"n{n}_funcs_per_s"] = n / dt
+    return out
+
+
+def main():
+    r = run()
+    for k, v in r.items():
+        print(f"bench_reconstruction,{k},{v}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

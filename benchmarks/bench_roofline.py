@@ -1,0 +1,85 @@
+"""Roofline table (deliverable (g)): reads dryrun_results/*.json (produced
+by ``python -m repro.launch.dryrun``) and emits the per-(arch x shape x
+mesh) three-term roofline table for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+
+def load(out_dir: str = "dryrun_results", mesh: str = None,
+         tag: str = "") -> List[dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(p))
+        if r.get("tag", "") != tag:
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        rows.append(r)
+    return rows
+
+
+def markdown(rows: List[dict]) -> str:
+    cols = ["arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+            "t_collective_s", "dominant", "useful_ratio", "mfu_model",
+            "fits_hbm"]
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join(["---"] * len(cols)) + "|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       + " | ".join(["SKIP"] * 6) + " | - |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       + " | ".join(["ERROR"] * 6) + " | - |")
+            continue
+        ro = r["roofline"]
+        vals = [r["arch"], r["shape"], r["mesh"],
+                f"{ro['t_compute_s']:.3e}", f"{ro['t_memory_s']:.3e}",
+                f"{ro['t_collective_s']:.3e}", ro["dominant"],
+                f"{ro['useful_ratio']:.3f}", f"{ro['mfu_model']:.3f}",
+                str(r["memory"]["fits_hbm"])]
+        out.append("| " + " | ".join(vals) + " |")
+    return "\n".join(out)
+
+
+def run(out_dir: str = "dryrun_results"):
+    rows = load(out_dir)
+    ok = [r for r in rows if r["status"] == "ok"]
+    if not ok:
+        return {"error": f"no dry-run records in {out_dir}; run "
+                "python -m repro.launch.dryrun --all first"}
+    doms = {}
+    fits = 0
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(
+            r["roofline"]["dominant"], 0) + 1
+        fits += r["memory"]["fits_hbm"]
+    return {
+        "cells_ok": len(ok),
+        "cells_skipped": sum(r["status"] == "skipped" for r in rows),
+        "cells_error": sum(r["status"] == "error" for r in rows),
+        "fits_hbm": fits,
+        **{f"dominant_{k}": v for k, v in doms.items()},
+        "mean_mfu_model": sum(r["roofline"]["mfu_model"] for r in ok)
+        / len(ok),
+    }
+
+
+def main():
+    r = run()
+    for k, v in r.items():
+        print(f"bench_roofline,{k},{v}")
+    rows = load()
+    if rows:
+        print()
+        print(markdown(rows))
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark driver: one benchmark per paper table/figure (DESIGN.md §7).
+
+``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+prints ``bench,metric,value`` CSV rows for every benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_aggregation, bench_channels, bench_overhead,
+                        bench_reconstruction, bench_roofline, bench_sparse)
+
+ALL = {
+    "channels": bench_channels,        # §4.1 wait-free channels
+    "sparse": bench_sparse,            # §8.2 sparse vs dense sizes
+    "aggregation": bench_aggregation,  # §8.2 / §6.1 streaming aggregation
+    "reconstruction": bench_reconstruction,  # §6.3 Fig. 5
+    "overhead": bench_overhead,        # §8.1 measurement overhead
+    "roofline": bench_roofline,        # deliverable (g)
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(ALL))
+    args = ap.parse_args(argv)
+    failures = 0
+    for name, mod in ALL.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.main()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"# {name} took {time.perf_counter() - t0:.1f}s", flush=True)
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,93 @@
+"""hpcviewer-style analysis of an existing database: the three code-centric
+views (top-down / bottom-up / flat), the thread-centric plot, and a custom
+derived metric — all against a database produced by any other example.
+
+    PYTHONPATH=src python examples/analyze_db.py [db_dir]
+
+Without an argument it first produces a database by profiling a short
+multi-thread run.
+"""
+import os
+import sys
+import tempfile
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregate import Database, aggregate
+from repro.core.derived import DerivedMetric, database_columns
+from repro.core.profiler import Profiler
+from repro.core.sparse import CMSReader
+from repro.core import viewer
+
+
+def make_db(out: str) -> str:
+    f = jax.jit(lambda x: jnp.tanh(x @ x).sum())
+    x = jnp.ones((256, 256))
+    compiled = f.lower(x).compile()
+    prof = Profiler(os.path.join(out, "prof"), tracing=False, rng_seed=0,
+                    unwind=False)
+    mid = prof.register_module("kern", compiled.as_text())
+
+    def worker(n):
+        for _ in range(n):
+            with prof.dispatch("kernel", "kern", stream=0, module_id=mid):
+                jax.block_until_ready(compiled(x))
+
+    with prof:
+        ts = [threading.Thread(target=worker, args=(3 + i,))
+              for i in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    paths = prof.write()
+    profiles = [v for k, v in paths.items() if "trace" not in k]
+    aggregate(profiles, os.path.join(out, "db"), n_ranks=2, n_threads=2)
+    return os.path.join(out, "db")
+
+
+def main():
+    if len(sys.argv) > 1:
+        db_dir = sys.argv[1]
+    else:
+        db_dir = make_db(tempfile.mkdtemp(prefix="repro_analyze_"))
+    db = Database.load(db_dir)
+
+    metric = "gpu_inst/samples" if "gpu_inst/samples" in db.metrics \
+        else db.metrics[0]
+    print(viewer.top_down(db, metric, max_depth=6, max_children=4))
+    print()
+    print(viewer.bottom_up(db, metric, top=5))
+    print()
+    print(viewer.flat(db, metric, top=8))
+
+    # thread-centric: one CCT node's metric across all profiles
+    cms = CMSReader(db.cms_path())
+    mid = db.metric_id("gpu_kernel/invocations")
+    best, best_n = 0, 0
+    for ctx in cms.contexts():
+        pids, _ = cms.metric_values(int(ctx), mid)
+        if len(pids) > best_n:
+            best, best_n = int(ctx), len(pids)
+    pids, vals = viewer.thread_plot(db, cms, best, "gpu_kernel/invocations")
+    print(f"\nthread-centric plot of {db.frames[best].pretty()!r}:")
+    for p, v in zip(pids, vals):
+        ident = db.profile_ids.get(int(p), {})
+        print(f"  profile {p} {ident.get('type', '?')}: "
+              + "#" * int(v) + f" {v:.0f}")
+
+    # a user-authored derived metric (spreadsheet formula, §7.1)
+    imbalance = DerivedMetric(
+        "imbalance", "gpu_kernel__time_ns / cpu__time_ns")
+    cols = database_columns(db)
+    try:
+        vals = imbalance.evaluate(cols)
+        print(f"\nderived 'gpu/cpu time' at root: {vals[0]:.3f}")
+    except KeyError:
+        pass
+
+
+if __name__ == "__main__":
+    main()

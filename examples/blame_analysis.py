@@ -1,0 +1,67 @@
+"""Reproduce the Nyx case study (paper §8.5): attribute GPU idleness to the
+CPU code executing while every GPU stream is idle.
+
+    PYTHONPATH=src python examples/blame_analysis.py
+
+A two-stream serving run is interleaved with deliberate CPU-side stalls
+(the paper's culprits: cuCtxSynchronize before an already-synchronizing
+copy, and JIT compilation at runtime).  The blame analysis partitions
+all-streams-idle time across active CPU contexts and ranks them — the
+paper used exactly this view to find and remove both stalls (10.6s ->
+9.8s, 1.08x on 640 streams).
+"""
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregate import aggregate
+from repro.core.blame import blame_gpu_idleness, blame_report
+from repro.core.profiler import Profiler
+from repro.core.trace import read_trace
+
+
+def main():
+    out = tempfile.mkdtemp(prefix="repro_blame_")
+    f = jax.jit(lambda x: jnp.tanh(x @ x).sum())
+    x = jnp.ones((256, 256))
+    compiled = f.lower(x).compile()
+
+    prof = Profiler(os.path.join(out, "prof"), tracing=True, rng_seed=0)
+    mid = prof.register_module("kernel_f", compiled.as_text())
+    with prof:
+        for i in range(6):
+            with prof.dispatch("kernel", "kernel_f", stream=i % 2,
+                               module_id=mid):
+                jax.block_until_ready(compiled(x))
+            if i == 2:
+                with prof.cpu_region("runtime_jit_compile"):
+                    time.sleep(0.05)      # the paper's JIT-at-runtime stall
+            with prof.cpu_region("host_preprocessing"):
+                time.sleep(0.01)
+    paths = prof.write()
+
+    profiles = [v for k, v in paths.items() if "trace" not in k
+                and k.startswith("cpu")]
+    cpu_trace_paths = [v for k, v in paths.items()
+                       if k.startswith("cpu_trace")]
+    # aggregation rewrites trace ctx ids into global calling-context ids
+    db = aggregate(profiles, os.path.join(out, "db"), n_ranks=1,
+                   n_threads=1, trace_paths=cpu_trace_paths)
+    cpu_traces = [read_trace(os.path.join(out, "db", os.path.basename(p)))
+                  for p in cpu_trace_paths]
+    gpu_traces = [read_trace(v) for k, v in paths.items()
+                  if k.startswith("gpu_trace")]
+    blame, idle = blame_gpu_idleness(cpu_traces, gpu_traces)
+    print(f"total all-streams-idle time: {idle / 1e6:.1f} ms\n")
+    print("GPU Idleness Blame (paper §7.2 tab), descending:")
+    for name, frac in blame_report(blame, idle, db, top=8):
+        print(f"  {frac:6.1%}  {name}")
+    print("\npaper outcome: removing the two top culprits -> 1.08x "
+          "end-to-end on 640 streams")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: measure a JAX program with the HPCToolkit-analogue stack.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. jit-compile a small function ("the GPU kernel"),
+2. register its compiled HLO as the loaded GPU binary (hpcstruct input),
+3. dispatch it a few times under the profiler (hpcrun),
+4. aggregate the resulting profiles (hpcprof),
+5. print the top-down / flat profile views (hpcviewer).
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregate import aggregate
+from repro.core.profiler import Profiler
+from repro.core import viewer
+
+
+def attention_like(x, w):
+    s = jnp.einsum("bqd,bkd->bqk", x, x) * x.shape[-1] ** -0.5
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, x) @ w
+
+
+def main():
+    out = tempfile.mkdtemp(prefix="repro_quickstart_")
+    x = jnp.ones((4, 128, 64))
+    w = jnp.ones((64, 64)) * 0.01
+    step = jax.jit(attention_like)
+    compiled = step.lower(x, w).compile()
+
+    prof = Profiler(os.path.join(out, "measure"), tracing=True, rng_seed=0)
+    module_id = prof.register_module("attention_like", compiled.as_text())
+    with prof:
+        for i in range(10):
+            with prof.dispatch("kernel", "attention_like", stream=0,
+                               module_id=module_id):
+                jax.block_until_ready(compiled(x, w))
+        with prof.dispatch("copy", "weights_h2d", stream=1,
+                           nbytes=w.size * 4):
+            pass
+    paths = prof.write()
+    print(f"wrote {len(paths)} profile/trace files under {out}/measure\n")
+
+    profiles = [v for k, v in paths.items()
+                if "trace" not in k]
+    db = aggregate(profiles, os.path.join(out, "db"), n_ranks=2,
+                   n_threads=2)
+    print(viewer.top_down(db, "gpu_inst/samples", max_depth=6))
+    print()
+    print(viewer.flat(db, "gpu_inst/samples", top=8))
+    print(f"\ndatabase: {out}/db")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""The paper's contribution: HPCToolkit-style measurement & analysis for
+JAX/TPU programs.  See DESIGN.md for the GPU->TPU adaptation map."""
+from repro.core.profiler import Profiler               # noqa: F401
+from repro.core.aggregate import aggregate, Database   # noqa: F401

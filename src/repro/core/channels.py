@@ -1,0 +1,134 @@
+"""Wait-free single-producer/single-consumer queues and bidirectional
+channels (paper §4.1).
+
+The paper coordinates application threads, a GPU monitor thread, and tracing
+threads exclusively through *bidirectional channels*, each a pair of
+wait-free SPSC queues — deliberately avoiding multi-producer queues (the
+OpenCL/Level-Zero discussion in §4.1 exists precisely to preserve the
+single-producer invariant).
+
+Wait-freedom here: ``try_push`` and ``try_pop`` complete in a bounded number
+of steps regardless of what the peer thread does — there are no locks, no
+CAS retry loops, and no blocking.  The producer writes only ``_tail`` and
+the slot it owns; the consumer writes only ``_head`` and clears the slot it
+owns.  In CPython the GIL guarantees that the int stores publish with the
+required ordering (slot write happens-before tail increment in program
+order, and bytecode boundaries act as full fences); in C this would be a
+release store on tail / acquire load on head, exactly as in [34].
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Any, Iterator, List, Optional
+
+_EMPTY = object()
+
+
+class SpscQueue:
+    """Bounded wait-free SPSC ring queue."""
+
+    __slots__ = ("_slots", "_capacity", "_head", "_tail",
+                 "push_failures", "pushes", "pops")
+
+    def __init__(self, capacity: int = 4096):
+        assert capacity > 0
+        self._slots: List[Any] = [None] * capacity
+        self._capacity = capacity
+        self._head = 0  # written only by the consumer
+        self._tail = 0  # written only by the producer
+        self.push_failures = 0
+        self.pushes = 0
+        self.pops = 0
+
+    def try_push(self, item: Any) -> bool:
+        """Producer-only.  Returns False when full (never blocks)."""
+        tail = self._tail
+        if tail - self._head >= self._capacity:
+            self.push_failures += 1
+            return False
+        self._slots[tail % self._capacity] = item  # write slot ...
+        self._tail = tail + 1                      # ... then publish
+        self.pushes += 1
+        return True
+
+    def try_pop(self) -> Any:
+        """Consumer-only.  Returns ``EMPTY`` when no item is ready."""
+        head = self._head
+        if head >= self._tail:
+            return _EMPTY
+        slot = head % self._capacity
+        item = self._slots[slot]
+        self._slots[slot] = None                   # release reference ...
+        self._head = head + 1                      # ... then consume
+        self.pops += 1
+        return item
+
+    def drain(self, limit: Optional[int] = None) -> Iterator[Any]:
+        """Consumer-only: pop until empty (or ``limit`` items)."""
+        count = itertools.count() if limit is None else iter(range(limit))
+        for _ in count:
+            item = self.try_pop()
+            if item is _EMPTY:
+                return
+            yield item
+
+    def __len__(self) -> int:  # approximate (racy but monotonic-safe)
+        return max(0, self._tail - self._head)
+
+    @property
+    def empty(self) -> bool:
+        return self._head >= self._tail
+
+
+EMPTY = _EMPTY
+
+
+class BidirectionalChannel:
+    """A pair of SPSC queues between exactly two threads (paper Fig. 2).
+
+    ``forward`` carries operation tuples (I, P, C_A) from an application
+    thread to the monitor thread; ``backward`` is the *activity channel*
+    carrying (A, P) pairs back.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        self.forward = SpscQueue(capacity)   # app -> monitor ("operation")
+        self.backward = SpscQueue(capacity)  # monitor -> app ("activity")
+
+    # convenience aliases matching the paper's terminology
+    @property
+    def operation(self) -> SpscQueue:
+        return self.forward
+
+    @property
+    def activity(self) -> SpscQueue:
+        return self.backward
+
+
+class ChannelSet:
+    """Registry of per-thread channels owned by the monitor thread.
+
+    Registration itself is the only locked operation (it happens once per
+    thread, off the hot path); all steady-state communication is wait-free.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        self._lock = threading.Lock()
+        self._channels: dict = {}
+        self._capacity = capacity
+
+    def channel_for(self, thread_id) -> BidirectionalChannel:
+        ch = self._channels.get(thread_id)
+        if ch is None:
+            with self._lock:
+                ch = self._channels.get(thread_id)
+                if ch is None:
+                    ch = BidirectionalChannel(self._capacity)
+                    self._channels[thread_id] = ch
+        return ch
+
+    def items(self):
+        # dict iteration is safe w.r.t. concurrent inserts under the GIL;
+        # take a snapshot to be explicit.
+        return list(self._channels.items())

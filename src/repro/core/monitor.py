@@ -1,0 +1,202 @@
+"""Measurement runtime (paper §4.1, Fig. 2): application threads, one GPU
+monitor thread, and N tracing threads coordinated via wait-free SPSC
+channels.
+
+Message flow (the OpenCL/Level-Zero variant of §4.1, since on this stack the
+completion "callback" runs on the application thread):
+
+  app thread:   dispatch I  -> unwind stack, insert placeholder P
+                            -> OP record (I, P, C_A) on its operation channel
+                completion  -> ACTIVITY record (A, P, C_A) on the same
+                               operation channel
+  monitor:      drains every thread's operation channel; matches activities
+                to operations; enqueues (A, P) on the owning thread's
+                activity channel C_A; if tracing, routes (A, P) to the
+                per-stream trace channel
+  tracing thrd: polls its set of trace channels, appends to trace files
+  app thread:   drains C_A (at the next dispatch or flush) and attributes
+                A's metrics below P — heterogeneous calling context.
+
+The monitor thread being the only producer into C_A (and the only consumer
+of each C_O) is what keeps every queue single-producer/single-consumer —
+the design point §4.1 makes explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.channels import BidirectionalChannel, ChannelSet, EMPTY, \
+    SpscQueue
+from repro.core.cct import CCTNode
+
+OP = 0
+ACTIVITY = 1
+SHUTDOWN = 2
+
+
+@dataclasses.dataclass
+class GpuOperation:
+    """Invocation record I."""
+    corr_id: int
+    kind: str                 # kernel | copy | sync
+    name: str
+    stream: int
+    placeholder: CCTNode
+    module_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class GpuActivity:
+    """Measurement record A."""
+    corr_id: int
+    kind: str
+    name: str
+    stream: int
+    t_start: int
+    t_end: int
+    bytes: int = 0
+    samples: Optional[list] = None      # fine-grained records (§4.2)
+    module_id: Optional[int] = None
+    meta: Optional[dict] = None
+
+    @property
+    def duration(self) -> int:
+        return self.t_end - self.t_start
+
+
+class MonitorThread:
+    """The GPU monitor thread of Fig. 2."""
+
+    def __init__(self, channels: ChannelSet, tracing: bool = False,
+                 n_tracing_threads: int = 1, poll_s: float = 1e-4):
+        self._channels = channels
+        self._tracing = tracing
+        self._poll_s = poll_s
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run,
+                                        name="repro-gpu-monitor",
+                                        daemon=True)
+        self._pending_ops: Dict[int, tuple] = {}   # corr_id -> (op, C_A)
+        # per-stream trace channels; monitor is the single producer
+        self._trace_channels: Dict[int, SpscQueue] = {}
+        self._trace_threads: List[TracingThread] = []
+        self._n_tracing = max(1, n_tracing_threads)
+        self.stats = {"ops": 0, "activities": 0, "routed": 0}
+        self.trace_sink: Optional[Callable] = None   # (stream, A, P) -> None
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self):
+        if self._tracing:
+            for i in range(self._n_tracing):
+                t = TracingThread(i, poll_s=self._poll_s)
+                self._trace_threads.append(t)
+                t.start()
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()
+        self._thread.join(timeout=10)
+        for t in self._trace_threads:
+            t.stop()
+
+    def quiesce(self, timeout: float = 5.0):
+        """Wait until all channels drain (used by flush)."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if all(ch.operation.empty for _, ch in self._channels.items()):
+                if not self._tracing or all(
+                        q.empty for q in self._trace_channels.values()):
+                    return True
+            time.sleep(self._poll_s)
+        return False
+
+    # -- the monitor loop ----------------------------------------------------
+    def _run(self):
+        while not self._stop.is_set():
+            busy = self._drain_once()
+            if not busy:
+                time.sleep(self._poll_s)
+        # final drain on shutdown
+        for _ in range(16):
+            if not self._drain_once():
+                break
+
+    def _drain_once(self) -> bool:
+        busy = False
+        for tid, ch in self._channels.items():
+            for rec in ch.operation.drain(limit=1024):
+                busy = True
+                tag = rec[0]
+                if tag == OP:
+                    _, op = rec
+                    self._pending_ops[op.corr_id] = (op, ch)
+                    self.stats["ops"] += 1
+                elif tag == ACTIVITY:
+                    _, act = rec
+                    self.stats["activities"] += 1
+                    entry = self._pending_ops.pop(act.corr_id, None)
+                    if entry is None:
+                        continue
+                    op, owner_ch = entry
+                    # route (A, P) back to the owning application thread
+                    while not owner_ch.activity.try_push((act, op.placeholder)):
+                        time.sleep(self._poll_s)  # backpressure, app drains
+                    self.stats["routed"] += 1
+                    if self._tracing:
+                        self._route_trace(act, op)
+        return busy
+
+    def _route_trace(self, act: GpuActivity, op: GpuOperation):
+        q = self._trace_channels.get(act.stream)
+        if q is None:
+            q = SpscQueue(1 << 16)
+            self._trace_channels[act.stream] = q
+            tt = self._trace_threads[act.stream % len(self._trace_threads)]
+            tt.add_channel(act.stream, q, self.trace_sink)
+        while not q.try_push((act, op.placeholder)):
+            time.sleep(self._poll_s)
+
+
+class TracingThread(threading.Thread):
+    """Records one or more GPU streams of activities (paper §4.1).
+
+    The number of tracing threads is user-adjustable to balance tracing
+    efficiency against tool resource usage.
+    """
+
+    def __init__(self, idx: int, poll_s: float = 1e-4):
+        super().__init__(name=f"repro-tracer-{idx}", daemon=True)
+        self._poll_s = poll_s
+        self._stop_evt = threading.Event()
+        self._channels: Dict[int, tuple] = {}
+        self._pending: List[tuple] = []
+        self.records: Dict[int, list] = {}
+
+    def add_channel(self, stream: int, q: SpscQueue, sink):
+        # single assignment from the monitor thread; dict insert is atomic
+        self._channels[stream] = (q, sink)
+
+    def run(self):
+        while not self._stop_evt.is_set():
+            busy = self._poll()
+            if not busy:
+                time.sleep(self._poll_s)
+        self._poll()
+
+    def _poll(self) -> bool:
+        busy = False
+        for stream, (q, sink) in list(self._channels.items()):
+            for act, placeholder in q.drain(limit=1024):
+                busy = True
+                self.records.setdefault(stream, []).append(
+                    (act.t_start, act.t_end, placeholder.node_id))
+                if sink is not None:
+                    sink(stream, act, placeholder)
+        return busy
+
+    def stop(self):
+        self._stop_evt.set()
+        self.join(timeout=10)

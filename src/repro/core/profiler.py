@@ -1,0 +1,285 @@
+"""hpcrun-analogue: the user-facing measurement API (paper §3, §4).
+
+Usage::
+
+    prof = Profiler(out_dir, tracing=True)
+    mid = prof.register_module("train_step", compiled.as_text())  # GPU binary
+    prof.start()
+    with prof.dispatch("kernel", "train_step", stream=0, module_id=mid):
+        out = step_fn(...)            # timed; samples synthesized on exit
+    prof.flush()
+    paths = prof.write()              # per-thread + per-stream profiles
+
+Every dispatch unwinds the *calling* Python stack, inserts a placeholder P
+in the thread's CCT, and communicates with the monitor thread over wait-free
+channels (monitor.py).  Fine-grained attribution (§4.2) hangs HLO-op
+contexts below P using hpcstruct-analogue structure info (structure.py) and
+the PC-sampling analogue (sampling.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import itertools
+import os
+import socket
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import sampling
+from repro.core.cct import (CCT, CCTNode, Frame, PLACEHOLDER,
+                            unwind_host_stack)
+from repro.core.channels import ChannelSet
+from repro.core.metrics import MetricRegistry, default_registry
+from repro.core.monitor import (ACTIVITY, OP, GpuActivity, GpuOperation,
+                                MonitorThread)
+from repro.core.profmt import write_profile
+from repro.core.structure import HloModule, parse_hlo
+from repro.core.trace import TraceWriter
+
+
+class _ThreadState:
+    def __init__(self, cct: CCT):
+        self.cct = cct
+        self.trace: List[tuple] = []     # (t0, t1, ctx_id) CPU-side trace
+
+
+class Profiler:
+    def __init__(self, out_dir: str, *, registry: Optional[MetricRegistry]
+                 = None, tracing: bool = True, n_tracing_threads: int = 1,
+                 sample_rate_hz: float = 1e6, instrument: bool = False,
+                 rank: int = 0, clock: Callable[[], int] = time.monotonic_ns,
+                 rng_seed: Optional[int] = None, unwind: bool = True):
+        self.out_dir = out_dir
+        os.makedirs(out_dir, exist_ok=True)
+        self.registry = registry or default_registry()
+        self.tracing = tracing
+        self.sample_rate_hz = sample_rate_hz
+        self.instrument = instrument
+        self.rank = rank
+        self.clock = clock
+        self.unwind = unwind
+        self._rng = (np.random.default_rng(rng_seed)
+                     if rng_seed is not None else None)
+        self._corr = itertools.count(1)
+        self._channels = ChannelSet()
+        self._monitor = MonitorThread(self._channels, tracing=tracing,
+                                      n_tracing_threads=n_tracing_threads)
+        self._threads: Dict[int, _ThreadState] = {}
+        self._threads_lock = threading.Lock()
+        self._modules: Dict[int, HloModule] = {}
+        self._module_names: Dict[int, str] = {}
+        self._op_ctx_cache: Dict[tuple, tuple] = {}
+        self._stream_ccts: Dict[int, CCT] = {}
+        self._stream_lock = threading.Lock()
+        self._started = False
+        self._host = socket.gethostname()
+        self._monitor.trace_sink = self._stream_profile_sink
+
+    # ------------------------------------------------------------------ #
+    def register_module(self, name: str, hlo_text: str) -> int:
+        """Record a loaded 'GPU binary' for later analysis (§3)."""
+        mid = len(self._modules) + 1
+        self._modules[mid] = parse_hlo(hlo_text, name=name)
+        self._module_names[mid] = name
+        return mid
+
+    def module(self, mid: int) -> HloModule:
+        return self._modules[mid]
+
+    def start(self):
+        if not self._started:
+            self._monitor.start()
+            self._started = True
+        return self
+
+    def stop(self):
+        if self._started:
+            self._monitor.stop()
+            self._started = False
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.flush()
+        self.stop()
+
+    # ------------------------------------------------------------------ #
+    def _state(self) -> _ThreadState:
+        tid = threading.get_ident()
+        st = self._threads.get(tid)
+        if st is None:
+            with self._threads_lock:
+                st = self._threads.setdefault(tid, _ThreadState(CCT()))
+        return st
+
+    def _host_context(self, st: _ThreadState, name: str) -> CCTNode:
+        if self.unwind:
+            frames = unwind_host_stack(skip=3)
+        else:
+            frames = [Frame("host", "<app>", "", 0)]
+        node = st.cct.insert_path(frames)
+        return node
+
+    @contextlib.contextmanager
+    def dispatch(self, kind: str, name: str, *, stream: int = 0,
+                 module_id: Optional[int] = None, nbytes: int = 0,
+                 duration_ns: Optional[int] = None):
+        """Times the enclosed GPU operation and attributes it.
+
+        ``duration_ns`` overrides the measured wall time (used when the
+        caller has a better device-side estimate, e.g. from events).
+        """
+        st = self._state()
+        ch = self._channels.channel_for(threading.get_ident())
+        ctx = self._host_context(st, name)
+        placeholder = st.cct.get_or_insert(
+            ctx, Frame(PLACEHOLDER, f"{kind}:{name}", str(stream), 0))
+        corr = next(self._corr)
+        op = GpuOperation(corr, kind, name, stream, placeholder, module_id)
+        while not ch.operation.try_push((OP, op)):
+            self._drain_activities(st, ch)
+        t0 = self.clock()
+        try:
+            yield placeholder
+        finally:
+            t1 = self.clock()
+            dur = duration_ns if duration_ns is not None else t1 - t0
+            samples = None
+            if kind == "kernel" and module_id in self._modules:
+                mod = self._modules[module_id]
+                if self.instrument:
+                    samples = sampling.instruction_counts(mod)
+                else:
+                    samples = sampling.pc_samples(
+                        mod, dur * 1e-9, self.sample_rate_hz, self._rng)
+            act = GpuActivity(corr, kind, name, stream, t0, t0 + dur,
+                              bytes=nbytes, samples=samples,
+                              module_id=module_id)
+            while not ch.operation.try_push((ACTIVITY, act)):
+                self._drain_activities(st, ch)
+            st.trace.append((t0, t0 + dur, ctx.node_id))
+            self._drain_activities(st, ch)
+
+    @contextlib.contextmanager
+    def cpu_region(self, name: str):
+        """Marks CPU work for the trace/blame views."""
+        st = self._state()
+        node = st.cct.insert_path([Frame("host", name, "", 0)],
+                                  parent=self._host_context(st, name))
+        t0 = self.clock()
+        try:
+            yield
+        finally:
+            t1 = self.clock()
+            node.metrics.add(self.registry.kind("cpu"), "time_ns", t1 - t0)
+            st.trace.append((t0, t1, node.node_id))
+
+    # ------------------------------------------------------------------ #
+    def _drain_activities(self, st: _ThreadState, ch):
+        for act, placeholder in ch.activity.drain():
+            self._attribute(st, act, placeholder)
+
+    def _attribute(self, st: _ThreadState, act: GpuActivity,
+                   placeholder: CCTNode):
+        reg = self.registry
+        kind_name = {"kernel": "gpu_kernel", "copy": "gpu_copy",
+                     "sync": "gpu_sync"}.get(act.kind, "gpu_kernel")
+        kind = reg.kind(kind_name)
+        placeholder.metrics.add(kind, "invocations", 1)
+        placeholder.metrics.add(kind, "time_ns", act.duration)
+        if kind_name == "gpu_copy" and act.bytes:
+            placeholder.metrics.add(kind, "bytes", act.bytes)
+        if act.samples and act.module_id is not None:
+            mod = self._modules[act.module_id]
+            ops = mod.all_ops()
+            total = sum(s.count for s in act.samples) or 1
+            ikind = reg.kind("gpu_inst")
+            # kind layout: (samples, stall_compute, stall_memory,
+            # stall_collective, flops, bytes) — one vectorized add per
+            # sample (4 name-indexed adds per sample dominated overhead)
+            midx = {m: i for i, m in enumerate(ikind.metrics)}
+            stall_col = {s: midx[f"stall_{s}"]
+                         for s in ("compute", "memory", "collective")}
+            i_samp, i_fl, i_by = midx["samples"], midx["flops"], midx["bytes"]
+            vec = np.zeros(len(ikind.metrics))
+            for s in act.samples:
+                op = ops[s.op_index] if s.op_index < len(ops) else None
+                if op is None:
+                    continue
+                key = (act.module_id, s.op_index)
+                frames = self._op_ctx_cache.get(key)
+                if frames is None:
+                    frames = tuple(mod.op_context(op))
+                    self._op_ctx_cache[key] = frames
+                node = st.cct.insert_path(list(frames), parent=placeholder)
+                vec[:] = 0.0
+                vec[i_samp] = s.count
+                vec[stall_col[s.stall]] = s.count
+                vec[i_fl] = op.flops * s.count / total
+                vec[i_by] = op.bytes * s.count / total
+                node.metrics.add_vec(ikind, vec)
+
+    def _stream_profile_sink(self, stream: int, act: GpuActivity,
+                             placeholder: CCTNode):
+        """Builds per-GPU-stream profiles on the tracing threads."""
+        with self._stream_lock:
+            cct = self._stream_ccts.setdefault(stream, CCT())
+        node = cct.insert_path(
+            [Frame(PLACEHOLDER, f"{act.kind}:{act.name}", str(stream), 0)])
+        kind = self.registry.kind("gpu_kernel" if act.kind == "kernel"
+                                  else f"gpu_{act.kind}")
+        node.metrics.add(kind, "invocations", 1)
+        node.metrics.add(kind, "time_ns", act.duration)
+
+    # ------------------------------------------------------------------ #
+    def flush(self, timeout: float = 10.0) -> bool:
+        ok = self._monitor.quiesce(timeout)
+        for tid, st in list(self._threads.items()):
+            ch = self._channels.channel_for(tid)
+            # app-thread drain is normally done on that thread; at flush the
+            # owning threads are quiescent, so the ownership transfers here.
+            self._drain_activities(st, ch)
+        return ok
+
+    def write(self) -> Dict[str, str]:
+        """Writes all profiles + traces.  Returns {label: path}."""
+        out: Dict[str, str] = {}
+        mods = [self._module_names[m] for m in sorted(self._modules)]
+        for i, (tid, st) in enumerate(sorted(self._threads.items())):
+            ident = {"host": self._host, "rank": self.rank, "thread": i,
+                     "type": "cpu"}
+            path = os.path.join(self.out_dir,
+                                f"profile_r{self.rank}_t{i}.rpro")
+            write_profile(path, st.cct, self.registry, ident, mods)
+            out[f"cpu_{i}"] = path
+            tw = TraceWriter(path.replace(".rpro", ".rtrc"), ident)
+            for rec in st.trace:
+                tw.append(*rec)
+            tw.close()
+            out[f"cpu_trace_{i}"] = tw.path
+        with self._stream_lock:
+            streams = dict(self._stream_ccts)
+        for sid, cct in sorted(streams.items()):
+            ident = {"host": self._host, "rank": self.rank, "stream": sid,
+                     "type": "gpu"}
+            path = os.path.join(self.out_dir,
+                                f"profile_r{self.rank}_s{sid}.rpro")
+            write_profile(path, cct, self.registry, ident, mods)
+            out[f"gpu_{sid}"] = path
+        # GPU stream traces from the tracing threads
+        for tt in self._monitor._trace_threads:
+            for sid, recs in tt.records.items():
+                ident = {"host": self._host, "rank": self.rank,
+                         "stream": sid, "type": "gpu"}
+                tw = TraceWriter(
+                    os.path.join(self.out_dir,
+                                 f"trace_r{self.rank}_s{sid}.rtrc"), ident)
+                for rec in recs:
+                    tw.append(*rec)
+                tw.close()
+                out[f"gpu_trace_{sid}"] = tw.path
+        return out

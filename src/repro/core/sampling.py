@@ -1,0 +1,147 @@
+"""Fine-grained measurement — the PC-sampling analogue (paper §4.2).
+
+NVIDIA GPUs expose hardware PC sampling (instruction address + stall reason
++ count).  TPUs expose no public equivalent, so we adapt (DESIGN.md §2): the
+"instruction" is an HLO op inside the compiled module, the sampling weight
+is the op's roofline-model time, and the *stall reason* analogue is the
+op's dominant bound class:
+
+    stall_compute    — MXU/VPU-bound (flops term dominates)
+    stall_memory     — HBM-bound (bytes term dominates)
+    stall_collective — ICI-bound (collective term dominates)
+
+The attribution machinery downstream of the sample source (samples ->
+activity records -> CCT nodes under the kernel placeholder -> lines/loops
+via structure info) is exactly the paper's.  On real TPUs the same
+``Sample`` records could be filled from XProf/XPlane device traces instead.
+
+The GT-Pin instrumentation path (§4.2's second mode) is the *exact* op
+count: ``instrument=True`` emits one record per op with its true executed
+count (1, or trip count inside while bodies) instead of sampled counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.structure import HloModule, HloOp
+
+# TPU v5e-class chip constants (also used by roofline.py)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 4.5e10              # ~bytes/s effective per link direction
+
+STALL_CLASSES = ("compute", "memory", "collective")
+
+
+@dataclasses.dataclass
+class Sample:
+    op_index: int            # index of the op within the module
+    stall: str               # one of STALL_CLASSES
+    count: int
+
+
+def op_time_model(op: HloOp) -> Dict[str, float]:
+    """Roofline time terms for one op (seconds)."""
+    tc = op.flops / PEAK_FLOPS
+    tm = op.bytes / HBM_BW
+    tcoll = 0.0
+    if op.is_collective:
+        g = max(op.group_size, 1)
+        tcoll = op.bytes * 2.0 * (g - 1) / g / ICI_BW
+    return {"compute": tc, "memory": tm, "collective": tcoll}
+
+
+# pseudo-ops that are not executed instructions (never sampled)
+_NON_INST = frozenset({"parameter", "constant", "get-tuple-element", "tuple",
+                       "bitcast", "after-all", "partition-id", "replica-id"})
+
+
+def op_weights(module: HloModule) -> "np.ndarray":
+    """(n_ops,) expected-time weights + (n_ops,) stall class indices.
+
+    Cached on the module — recomputing per dispatch dominated tool overhead
+    (bench_overhead: 4.1x -> ~2x after caching; EXPERIMENTS.md §Perf)."""
+    cached = getattr(module, "_op_weights_cache", None)
+    if cached is not None:
+        return cached
+    ops = module.all_ops()
+    w = np.zeros(len(ops))
+    stall = np.zeros(len(ops), np.int32)
+    for i, op in enumerate(ops):
+        if op.opcode in _NON_INST:
+            continue
+        t = op_time_model(op)
+        w[i] = max(t.values())
+        stall[i] = int(np.argmax([t["compute"], t["memory"],
+                                  t["collective"]]))
+    module._op_weights_cache = (w, stall)
+    return w, stall
+
+
+def pc_samples(module: HloModule, duration_s: float,
+               rate_hz: float = 1e6, rng: Optional[np.random.Generator] = None,
+               ) -> List[Sample]:
+    """Draw PC samples for one kernel execution of ``duration_s``.
+
+    Expected total samples = duration * rate; distributed over ops
+    proportionally to modeled op time (multinomial when rng given,
+    deterministic expectation rounding otherwise).
+    """
+    ops = module.all_ops()
+    if not ops:
+        return []
+    w, stall = op_weights(module)
+    total_w = w.sum()
+    if total_w <= 0:
+        return []
+    n = max(1, int(duration_s * rate_hz))
+    if rng is not None:
+        counts = rng.multinomial(n, w / total_w)
+    else:
+        counts = np.floor(n * w / total_w + 0.5).astype(np.int64)
+    out: List[Sample] = []
+    for i, c in enumerate(counts):
+        if c > 0:
+            out.append(Sample(op_index=ops[i].index,
+                              stall=STALL_CLASSES[stall[i]], count=int(c)))
+    return out
+
+
+def instruction_counts(module: HloModule,
+                       trip_counts: Optional[Dict[str, int]] = None,
+                       ) -> List[Sample]:
+    """GT-Pin-analogue instrumentation: exact per-op executed counts.
+
+    ``trip_counts``: while-op name -> trip count (defaults to 1); counts
+    multiply through nested loop bodies, mirroring basic-block count
+    propagation in §4.2.
+    """
+    trip_counts = trip_counts or {}
+    # computation -> execution multiplier
+    mult: Dict[str, int] = {module.entry: 1}
+    callers = module.callers()
+
+    def comp_mult(comp: str, seen=frozenset()) -> int:
+        if comp in mult:
+            return mult[comp]
+        if comp in seen:
+            return 1
+        sites = callers.get(comp, [])
+        if not sites:
+            mult[comp] = 1
+            return 1
+        site = sites[0]
+        m = comp_mult(site.comp, seen | {comp})
+        if site.opcode == "while":
+            m *= trip_counts.get(site.name, 1)
+        mult[comp] = m
+        return m
+
+    out = []
+    for op in module.all_ops():
+        m = comp_mult(op.comp)
+        out.append(Sample(op_index=op.index, stall="compute", count=m))
+    return out

@@ -1,0 +1,322 @@
+"""PMS / CMS sparse-cube analysis formats (paper §6.2, Fig. 4).
+
+The analysis result is a sparse cube indexed by (profile, context, metric).
+Two complementary layouts, each a stack of modified-CSR planes:
+
+- **PMS (Profile-Major Sparse)**: one plane per profile -> compare metrics
+  *within* a thread/stream; plane = CSR over (context -> metric, value).
+- **CMS (CCT-Major Sparse)**: one plane per context -> compare a metric
+  *across* profiles; plane = sparse ``midxs`` array of (metric id, start)
+  pairs (many metrics are empty for a context, so even the CSR row array is
+  sparsified — the paper's key refinement), then ``pids`` and ``vals``.
+
+Access costs (asserted by tests, matching §6.2): plane locate O(1) via the
+offsets vector, metric locate O(log m) by binary search in midxs, a single
+(ctx, metric, profile) value O(log m + log p).
+
+Construction mirrors hpcprof-mpi: workers are assigned profiles (PMS) or
+contexts *balanced by non-zero count* (CMS); an exscan over plane sizes
+yields every worker's write offset; workers then fill a preallocated
+memmap concurrently without further communication, in bounded-memory
+rounds (out-of-core).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import struct
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+CMS_MAGIC = b"RCMS"
+PMS_MAGIC = b"RPMS"
+
+
+@dataclasses.dataclass
+class ProfileValues:
+    """Sparse values of one profile: parallel arrays (ctx, metric, value)."""
+    profile_id: int
+    ctx: np.ndarray        # (V,) uint32
+    metric: np.ndarray     # (V,) uint32
+    values: np.ndarray     # (V,) float64
+
+
+def _exscan(sizes: Sequence[int]) -> List[int]:
+    out = [0]
+    for s in sizes[:-1]:
+        out.append(out[-1] + int(s))
+    return out
+
+
+# =========================================================================
+# CMS
+# =========================================================================
+def write_cms(path: str, profiles: List[ProfileValues], *,
+              n_workers: int = 4, max_round_bytes: int = 1 << 28) -> dict:
+    """Builds the CCT-major cube.  Returns size stats."""
+    # --- transpose to per-context COO (vectorized) --------------------------
+    ctx = np.concatenate([p.ctx for p in profiles]) if profiles else \
+        np.zeros(0, np.uint32)
+    met = np.concatenate([p.metric for p in profiles]) if profiles else \
+        np.zeros(0, np.uint32)
+    val = np.concatenate([p.values for p in profiles]) if profiles else \
+        np.zeros(0, np.float64)
+    pid = np.concatenate([np.full(len(p.ctx), p.profile_id, np.uint32)
+                          for p in profiles]) if profiles else \
+        np.zeros(0, np.uint32)
+    # sort by (ctx, metric, profile)
+    order = np.lexsort((pid, met, ctx))
+    ctx, met, val, pid = ctx[order], met[order], val[order], pid[order]
+
+    uctx, starts = np.unique(ctx, return_index=True)
+    bounds = np.append(starts, len(ctx))
+
+    # per-context plane sizes: midx entries + sentinel, pids, vals
+    # (vectorized: unique (ctx, metric) pairs -> metric count per context)
+    pair = (ctx.astype(np.int64) << 32) | met.astype(np.int64)
+    upair_ctx = (np.unique(pair) >> 32).astype(np.int64)
+    _, m_counts = np.unique(upair_ctx, return_counts=True)
+    n_midxs = m_counts + 1  # + sentinel
+    nnz = bounds[1:] - bounds[:-1]
+    plane_bytes = n_midxs * 12 + nnz * (4 + 8)
+    offsets = np.zeros(len(uctx), np.int64)
+    np.cumsum(plane_bytes[:-1], out=offsets[1:len(uctx)])
+
+    header = {
+        "n_ctx": int(len(uctx)),
+        "n_profiles": int(len(profiles)),
+        "nnz": int(len(val)),
+    }
+    hdr = json.dumps(header).encode()
+    index_bytes = len(uctx) * 24
+    data_start = 4 + 4 + len(hdr) + 4 + index_bytes
+    total = data_start + int(plane_bytes.sum())
+
+    with open(path, "wb") as f:
+        f.truncate(total)
+    mm = np.memmap(path, np.uint8, "r+")
+    mm[:4] = np.frombuffer(CMS_MAGIC, np.uint8)
+    mm[4:8] = np.frombuffer(struct.pack("<I", len(hdr)), np.uint8)
+    mm[8:8 + len(hdr)] = np.frombuffer(hdr, np.uint8)
+    p0 = 8 + len(hdr)
+    mm[p0:p0 + 4] = np.frombuffer(struct.pack("<I", len(uctx)), np.uint8)
+    # context index: (ctx_id u32, nnz u32, abs offset u64, n_midxs u32) = 20B
+    # pad to 24 for alignment
+    idx = np.zeros((len(uctx), 3), np.int64)
+    idx[:, 0] = uctx
+    idx[:, 1] = (n_midxs << 32) | nnz
+    idx[:, 2] = offsets + data_start
+    mm[p0 + 4:p0 + 4 + index_bytes] = np.frombuffer(idx.tobytes(), np.uint8)
+
+    # --- parallel plane fill: contexts balanced by nnz, bounded rounds ------
+    work = list(range(len(uctx)))
+    # greedy balance by non-zeros (paper: CMS load-balances on nnz)
+    work.sort(key=lambda i: -int(nnz[i]))
+    buckets: List[List[int]] = [[] for _ in range(n_workers)]
+    loads = [0] * n_workers
+    for i in work:
+        b = loads.index(min(loads))
+        buckets[b].append(i)
+        loads[b] += int(nnz[i])
+
+    def fill(bucket: List[int]):
+        spent = 0
+        for i in bucket:
+            lo, hi = bounds[i], bounds[i + 1]
+            seg_m = met[lo:hi]
+            seg_p = pid[lo:hi]
+            seg_v = val[lo:hi]
+            um, ustarts = np.unique(seg_m, return_index=True)
+            midxs = np.zeros((len(um) + 1, 1),
+                             dtype=[("m", "<u4"), ("s", "<u8")])
+            midxs["m"][:-1, 0] = um
+            midxs["s"][:-1, 0] = ustarts
+            midxs["m"][-1, 0] = 0xFFFFFFFF
+            midxs["s"][-1, 0] = hi - lo
+            off = int(idx[i, 2])
+            blob = (midxs.tobytes() + seg_p.astype("<u4").tobytes()
+                    + seg_v.astype("<f8").tobytes())
+            mm[off:off + len(blob)] = np.frombuffer(blob, np.uint8)
+            spent += len(blob)
+            if spent >= max_round_bytes:   # out-of-core round boundary
+                mm.flush()
+                spent = 0
+
+    if n_workers > 1:
+        with ThreadPoolExecutor(n_workers) as ex:
+            list(ex.map(fill, buckets))
+    else:
+        for b in buckets:
+            fill(b)
+    mm.flush()
+    return {"bytes": total, "nnz": int(len(val)), "n_ctx": int(len(uctx))}
+
+
+class CMSReader:
+    def __init__(self, path: str):
+        self._mm = np.memmap(path, np.uint8, "r")
+        assert bytes(self._mm[:4]) == CMS_MAGIC
+        (hlen,) = struct.unpack("<I", self._mm[4:8])
+        self.header = json.loads(bytes(self._mm[8:8 + hlen]))
+        p0 = 8 + hlen
+        (n_ctx,) = struct.unpack("<I", self._mm[p0:p0 + 4])
+        idx = np.frombuffer(self._mm[p0 + 4:p0 + 4 + n_ctx * 24],
+                            np.int64).reshape(-1, 3)
+        self._ctx_ids = idx[:, 0]
+        self._n_midxs = (idx[:, 1] >> 32).astype(np.int64)
+        self._nnz = (idx[:, 1] & 0xFFFFFFFF).astype(np.int64)
+        self._offsets = idx[:, 2]
+
+    def contexts(self) -> np.ndarray:
+        return self._ctx_ids
+
+    def _plane(self, ctx: int):
+        i = int(np.searchsorted(self._ctx_ids, ctx))
+        if i >= len(self._ctx_ids) or self._ctx_ids[i] != ctx:
+            return None
+        off = int(self._offsets[i])
+        nm = int(self._n_midxs[i])
+        nv = int(self._nnz[i])
+        midxs = np.frombuffer(self._mm[off:off + nm * 12],
+                              dtype=[("m", "<u4"), ("s", "<u8")])
+        off += nm * 12
+        pids = np.frombuffer(self._mm[off:off + nv * 4], "<u4")
+        off += nv * 4
+        vals = np.frombuffer(self._mm[off:off + nv * 8], "<f8")
+        return midxs, pids, vals
+
+    def metric_values(self, ctx: int, metric: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """All (profile, value) pairs for one (ctx, metric): O(log m)."""
+        plane = self._plane(ctx)
+        if plane is None:
+            return np.zeros(0, np.uint32), np.zeros(0, np.float64)
+        midxs, pids, vals = plane
+        ms = midxs["m"].astype(np.int64)
+        j = int(np.searchsorted(ms[:-1], metric))
+        if j >= len(ms) - 1 or ms[j] != metric:
+            return np.zeros(0, np.uint32), np.zeros(0, np.float64)
+        lo, hi = int(midxs["s"][j]), int(midxs["s"][j + 1])
+        return pids[lo:hi], vals[lo:hi]
+
+    def lookup(self, ctx: int, metric: int, profile: int) -> float:
+        """O(log m + log p) single-value access (paper complexity claim)."""
+        pids, vals = self.metric_values(ctx, metric)
+        k = int(np.searchsorted(pids, profile))
+        if k < len(pids) and pids[k] == profile:
+            return float(vals[k])
+        return 0.0
+
+
+# =========================================================================
+# PMS
+# =========================================================================
+def write_pms(path: str, profiles: List[ProfileValues], *,
+              n_workers: int = 4) -> dict:
+    """Profile-major cube: one CSR plane per profile (work split by
+    profile count — the paper's PMS load-balance rule)."""
+    sizes = []
+    for p in profiles:
+        n_ctx_rows = len(np.unique(p.ctx)) + 1
+        sizes.append(n_ctx_rows * 12 + len(p.ctx) * 12)
+    offsets = _exscan(sizes)
+    header = {"n_profiles": len(profiles)}
+    hdr = json.dumps(header).encode()
+    index_bytes = len(profiles) * 24
+    data_start = 8 + len(hdr) + 4 + index_bytes
+    total = data_start + sum(sizes)
+
+    with open(path, "wb") as f:
+        f.truncate(total)
+    mm = np.memmap(path, np.uint8, "r+")
+    mm[:4] = np.frombuffer(PMS_MAGIC, np.uint8)
+    mm[4:8] = np.frombuffer(struct.pack("<I", len(hdr)), np.uint8)
+    mm[8:8 + len(hdr)] = np.frombuffer(hdr, np.uint8)
+    p0 = 8 + len(hdr)
+    mm[p0:p0 + 4] = np.frombuffer(struct.pack("<I", len(profiles)), np.uint8)
+    idx = np.zeros((len(profiles), 3), np.int64)
+    for i, p in enumerate(profiles):
+        idx[i] = (p.profile_id, len(p.ctx), offsets[i] + data_start)
+    mm[p0 + 4:p0 + 4 + index_bytes] = np.frombuffer(idx.tobytes(), np.uint8)
+
+    def fill(i: int):
+        p = profiles[i]
+        order = np.lexsort((p.metric, p.ctx))
+        ctx = p.ctx[order]
+        met = p.metric[order]
+        vals = p.values[order]
+        uc, starts = np.unique(ctx, return_index=True)
+        rows = np.zeros((len(uc) + 1, 1),
+                        dtype=[("c", "<u4"), ("s", "<u8")])
+        rows["c"][:-1, 0] = uc
+        rows["s"][:-1, 0] = starts
+        rows["c"][-1, 0] = 0xFFFFFFFF
+        rows["s"][-1, 0] = len(ctx)
+        blob = (rows.tobytes() + met.astype("<u4").tobytes()
+                + vals.astype("<f8").tobytes())
+        off = int(idx[i, 2])
+        mm[off:off + len(blob)] = np.frombuffer(blob, np.uint8)
+
+    if n_workers > 1:
+        with ThreadPoolExecutor(n_workers) as ex:
+            list(ex.map(fill, range(len(profiles))))
+    else:
+        for i in range(len(profiles)):
+            fill(i)
+    mm.flush()
+    return {"bytes": total}
+
+
+class PMSReader:
+    def __init__(self, path: str):
+        self._mm = np.memmap(path, np.uint8, "r")
+        assert bytes(self._mm[:4]) == PMS_MAGIC
+        (hlen,) = struct.unpack("<I", self._mm[4:8])
+        self.header = json.loads(bytes(self._mm[8:8 + hlen]))
+        p0 = 8 + hlen
+        (n,) = struct.unpack("<I", self._mm[p0:p0 + 4])
+        idx = np.frombuffer(self._mm[p0 + 4:p0 + 4 + n * 24],
+                            np.int64).reshape(-1, 3)
+        self._pids = idx[:, 0]
+        self._nnz = idx[:, 1]
+        self._offsets = idx[:, 2]
+
+    def profile_plane(self, profile: int):
+        i = int(np.searchsorted(self._pids, profile))
+        if i >= len(self._pids) or self._pids[i] != profile:
+            return None
+        off = int(self._offsets[i])
+        nv = int(self._nnz[i])
+        # rows until sentinel
+        rows = []
+        while True:
+            c, s = struct.unpack("<IQ", self._mm[off:off + 12])
+            rows.append((c, s))
+            off += 12
+            if c == 0xFFFFFFFF:
+                break
+        mets = np.frombuffer(self._mm[off:off + nv * 4], "<u4")
+        off += nv * 4
+        vals = np.frombuffer(self._mm[off:off + nv * 8], "<f8")
+        return rows, mets, vals
+
+    def context_values(self, profile: int, ctx: int) -> Dict[int, float]:
+        plane = self.profile_plane(profile)
+        if plane is None:
+            return {}
+        rows, mets, vals = plane
+        cs = np.array([r[0] for r in rows], np.int64)
+        j = int(np.searchsorted(cs[:-1], ctx))
+        if j >= len(cs) - 1 or cs[j] != ctx:
+            return {}
+        lo, hi = rows[j][1], rows[j + 1][1]
+        return {int(m): float(v) for m, v in zip(mets[lo:hi], vals[lo:hi])}
+
+
+def dense_cube_nbytes(n_profiles: int, n_ctx: int, n_metrics: int) -> int:
+    """Size of the dense (profile x context x metric) cube (§8.2)."""
+    return n_profiles * n_ctx * n_metrics * 8

@@ -1,0 +1,65 @@
+"""Trace files (paper §3, §4.1, §4.4): per CPU-thread / GPU-stream sequences
+of (t_start, t_end, cct_node) events.
+
+Per §4.4: CUPTI usually orders activities within a stream but the order is
+undefined for OpenCL (and even Power9+CUPTI produced overlaps), so rather
+than ordering online, the writer just *notes* out-of-order appends and the
+post-mortem reader sorts when the flag is set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import List, Tuple
+
+import numpy as np
+
+_REC = struct.Struct("<QQI")
+MAGIC = b"RTRC"
+
+
+class TraceWriter:
+    def __init__(self, path: str, identity: dict):
+        self.path = path
+        self.identity = identity
+        self._records: List[Tuple[int, int, int]] = []
+        self._last_start = -1
+        self.out_of_order = False
+
+    def append(self, t_start: int, t_end: int, ctx_id: int) -> None:
+        if t_start < self._last_start:
+            self.out_of_order = True  # noted; sorted post-mortem (§4.4)
+        self._last_start = t_start
+        self._records.append((t_start, t_end, ctx_id))
+
+    def close(self) -> None:
+        import json
+        with open(self.path, "wb") as f:
+            hdr = json.dumps({"identity": self.identity,
+                              "out_of_order": self.out_of_order}).encode()
+            f.write(MAGIC + struct.pack("<I", len(hdr)) + hdr)
+            arr = np.asarray(self._records, np.uint64).reshape(-1, 3)
+            f.write(arr.tobytes())
+
+
+@dataclasses.dataclass
+class TraceData:
+    identity: dict
+    starts: np.ndarray
+    ends: np.ndarray
+    ctx: np.ndarray
+
+
+def read_trace(path: str) -> TraceData:
+    import json
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC
+        (n,) = struct.unpack("<I", f.read(4))
+        hdr = json.loads(f.read(n))
+        arr = np.frombuffer(f.read(), np.uint64).reshape(-1, 3)
+    starts, ends, ctx = arr[:, 0], arr[:, 1], arr[:, 2].astype(np.int64)
+    if hdr.get("out_of_order"):
+        order = np.argsort(starts, kind="stable")  # post-mortem sort (§4.4)
+        starts, ends, ctx = starts[order], ends[order], ctx[order]
+    return TraceData(hdr["identity"], starts.astype(np.int64),
+                     ends.astype(np.int64), ctx)

@@ -1,0 +1,142 @@
+"""Text-mode hpcviewer (paper §7): profile views (top-down / bottom-up /
+flat), thread-centric plots (as columns), and the trace Statistic tab.
+
+The GUI renders a database; we render the same content as aligned text so
+tests and examples can assert on it.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.aggregate import Database
+from repro.core.trace import TraceData
+
+
+def _fmt(v: float) -> str:
+    if v == 0:
+        return "."
+    if abs(v) >= 1e6 or 0 < abs(v) < 1e-2:
+        return f"{v:.3e}"
+    return f"{v:,.2f}"
+
+
+def top_down(db: Database, metric: str, *, stat: str = "sum",
+             max_depth: int = 8, min_frac: float = 0.01,
+             max_children: int = 8) -> str:
+    """Costs in full calling context (inclusive metrics)."""
+    mid = db.metric_id(metric)
+    col = db.stats[stat][:, mid]
+    total = col[0] if col[0] else max(col.max(), 1e-30)
+    kids: Dict[int, List[int]] = {}
+    for gid, par in enumerate(db.parents):
+        if par >= 0:
+            kids.setdefault(int(par), []).append(gid)
+    lines = [f"TOP-DOWN  metric={metric} [{stat}]  total={_fmt(total)}"]
+
+    def rec(gid: int, depth: int):
+        if depth > max_depth:
+            return
+        cs = sorted(kids.get(gid, []), key=lambda c: -col[c])
+        shown = 0
+        for c in cs:
+            if col[c] / total < min_frac or shown >= max_children:
+                break
+            shown += 1
+            lines.append("  " * depth
+                         + f"{col[c] / total * 100:5.1f}% {_fmt(col[c]):>12} "
+                         + db.frames[c].pretty())
+            rec(c, depth + 1)
+
+    rec(0, 0)
+    return "\n".join(lines)
+
+
+def _exclusive(db: Database, col: np.ndarray) -> np.ndarray:
+    """Inclusive -> exclusive: subtract children sums."""
+    ex = col.copy()
+    for gid, par in enumerate(db.parents):
+        if par >= 0:
+            ex[par] -= col[gid]
+    return np.maximum(ex, 0.0)
+
+
+def flat(db: Database, metric: str, *, stat: str = "sum",
+         top: int = 15) -> str:
+    """Aggregate costs by frame, independent of calling context."""
+    mid = db.metric_id(metric)
+    ex = _exclusive(db, db.stats[stat][:, mid])
+    agg: Dict[str, float] = {}
+    for gid, f in enumerate(db.frames):
+        agg[f.pretty()] = agg.get(f.pretty(), 0.0) + ex[gid]
+    rows = sorted(agg.items(), key=lambda kv: -kv[1])[:top]
+    total = sum(agg.values()) or 1.0
+    lines = [f"FLAT  metric={metric} [{stat}]"]
+    for name, v in rows:
+        if v <= 0:
+            continue
+        lines.append(f"{v / total * 100:5.1f}% {_fmt(v):>12}  {name}")
+    return "\n".join(lines)
+
+
+def bottom_up(db: Database, metric: str, *, stat: str = "sum",
+              top: int = 10, caller_depth: int = 3) -> str:
+    """Apportion each frame's exclusive cost to its callers."""
+    mid = db.metric_id(metric)
+    ex = _exclusive(db, db.stats[stat][:, mid])
+    by_frame: Dict[str, Dict[Tuple[str, ...], float]] = {}
+    for gid in range(1, len(db.frames)):
+        v = ex[gid]
+        if v <= 0:
+            continue
+        name = db.frames[gid].pretty()
+        chain = []
+        p = int(db.parents[gid])
+        while p > 0 and len(chain) < caller_depth:
+            chain.append(db.frames[p].pretty())
+            p = int(db.parents[p])
+        by_frame.setdefault(name, {})
+        key = tuple(chain)
+        by_frame[name][key] = by_frame[name].get(key, 0.0) + v
+    totals = sorted(((sum(c.values()), n) for n, c in by_frame.items()),
+                    reverse=True)[:top]
+    lines = [f"BOTTOM-UP  metric={metric} [{stat}]"]
+    for v, name in totals:
+        lines.append(f"{_fmt(v):>12}  {name}")
+        for chain, cv in sorted(by_frame[name].items(),
+                                key=lambda kv: -kv[1])[:4]:
+            lines.append("              <- " + " <- ".join(chain) if chain
+                         else "              <- (root)")
+    return "\n".join(lines)
+
+
+def thread_plot(db: Database, cms_reader, ctx: int, metric: str,
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """(profile ids, values) for one CCT node across profiles — the
+    thread-centric view (plot of a metric for a selected node)."""
+    return cms_reader.metric_values(ctx, db.metric_id(metric))
+
+
+def trace_statistic(traces: Sequence[TraceData], db: Database,
+                    depth: int = 2, top: int = 10) -> List[Tuple[str, float]]:
+    """The trace-view Statistic tab: fraction of total trace area occupied
+    by each routine at the given call-stack depth."""
+    area: Dict[str, float] = {}
+    total = 0.0
+    for tr in traces:
+        for s, e, c in zip(tr.starts, tr.ends, tr.ctx):
+            dur = float(e - s)
+            total += dur
+            # walk up to requested depth
+            gid = int(c)
+            chain = []
+            while gid > 0 and gid < len(db.frames):
+                chain.append(gid)
+                gid = int(db.parents[gid])
+            pick = chain[-depth] if len(chain) >= depth else chain[0] \
+                if chain else 0
+            name = db.frames[pick].pretty()
+            area[name] = area.get(name, 0.0) + dur
+    rows = sorted(area.items(), key=lambda kv: -kv[1])[:top]
+    return [(n, v / total if total else 0.0) for n, v in rows]

@@ -1,0 +1,2 @@
+from repro.ft.watchdog import (ElasticPlan, RestartPolicy, StragglerWatchdog,  # noqa: F401
+                               plan_elastic_mesh)

@@ -1,0 +1,106 @@
+"""Flash-decode attention as a Pallas TPU kernel.
+
+The serving hot spot: one query token per sequence against a long KV
+cache.  There is no parallelism in the q dimension (S_q = 1), so the TPU
+schedule parallelizes over the *cache sequence*: the grid walks kv blocks
+on its innermost (sequential) dimension carrying (m, l, acc) online-softmax
+scratch in VMEM — the split-KV half of "flash decoding", with the final
+merge happening in the same carry (TPU grids execute sequentially, so no
+separate reduction kernel is needed).
+
+GQA layout: one grid cell covers ALL G grouped q-heads of one kv head —
+q block (G, D) x kv block (bk, D) keeps the MXU busy with a (G x bk)
+score tile instead of G separate (1 x bk) vector products.
+
+Length masking: positions >= ``length`` (the current cache fill) are
+masked with -inf before the online-softmax update; whole blocks beyond
+``length`` are skipped with ``pl.when`` (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, bk: int, nk: int):
+    """Grid (B, Hkv, nk); nk innermost/sequential."""
+    ki = pl.program_id(2)
+    length = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_lo = ki * bk
+
+    @pl.when(k_lo < length)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)    # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)    # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (G, bk)
+        s *= q.shape[-1] ** -0.5
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_scr[...]                          # (G, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode_fwd(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length, *, block_kv: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, H, D); k/v_cache: (B, Smax, Hkv, D); length: scalar int32
+    valid cache length.  Returns (B, H, D)."""
+    B, H, D = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    assert H % Hkv == 0
+    G = H // Hkv
+    bk = min(block_kv, Smax)
+    assert Smax % bk == 0, (Smax, bk)
+    nk = Smax // bk
+    qh = q.reshape(B, Hkv, G, D)
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+
+    kern = functools.partial(_decode_kernel, bk=bk, nk=nk)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ki: (0,)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[_vmem((G, 1)), _vmem((G, 1)), _vmem((G, D))],
+        interpret=interpret,
+    )(length, qh, k_cache, v_cache)
+    return out.reshape(B, H, D)
+
+
+def _vmem(shape):
+    import jax.experimental.pallas.tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

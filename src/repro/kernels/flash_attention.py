@@ -1,0 +1,145 @@
+"""Flash attention as a Pallas TPU kernel (forward).
+
+TPU-native adaptation (DESIGN.md §2 hardware-adaptation notes): instead of
+a CUDA warp-level softmax, the kernel tiles (q-block x kv-block) into VMEM
+via BlockSpecs, runs the online-softmax update on the MXU with fp32
+accumulator scratch, and walks kv blocks on the *innermost grid dimension*
+(sequentially executed on TPU) so the running (m, l, acc) state lives in
+VMEM scratch across grid steps — the canonical TPU flash schedule.
+
+Grid: (B, Hkv, G, nq, nk), nk innermost/sequential.
+Blocks: q (1,1,1,bq,D), k/v (1,1,bk,D) with the kv index map collapsing the
+G grouped-query dimension (GQA: G q-heads share one kv head).  D is the
+full head dim (<= 256 fits VMEM comfortably at bq = bk = 128/256:
+bq*D + 2*bk*D + bq*bk fp32 ~ 0.5 MB).
+
+Causal masking: blocks strictly above the diagonal are skipped with
+``pl.when`` (no MXU work issued); the diagonal block applies the triangular
+mask.  ``window`` adds a sliding-window lower bound (SWA layers).
+
+The backward pass is the O(S)-memory block-recompute VJP already used by
+``models.attention`` (ops.py wires it via jax.custom_vjp) — the hot spot
+the paper-style profile attributes >90% of training step samples to is the
+forward+recompute matmuls, which is exactly what this kernel owns.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                      bq: int, bk: int, nk: int, causal: bool, window: int,
+                      q_offset: int):
+    """One (b, hkv, g, qi, ki) grid cell."""
+    qi = pl.program_id(3)
+    ki = pl.program_id(4)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # absolute positions of this block's rows/cols
+    q_lo = q_offset + qi * bq           # first q row's absolute position
+    k_lo = ki * bk
+
+    # causal block skip: the whole kv block is in the future of the whole
+    # q block  <=>  k_lo > q_lo + bq - 1
+    run = jnp.bool_(True)
+    if causal:
+        run &= k_lo <= q_lo + bq - 1
+    if window:
+        # whole kv block is below the window of the last q row
+        run &= k_lo + bk - 1 > q_lo - window
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, 0, 0].astype(jnp.float32)       # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (bq, bk)
+        s *= q.shape[-1] ** -0.5
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        if causal:
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        if window:
+            s = jnp.where(kpos > qpos - window, s, NEG_INF)
+        m_prev = m_scr[...]                          # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = 256, block_kv: int = 256,
+                        q_offset: int = 0,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B, S, H, D); k/v: (B, Sk, Hkv, D).  Returns (B, S, H, D)."""
+    B, S, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0, (H, Hkv)
+    G = H // Hkv
+    bq = min(block_q, S)
+    bk = min(block_kv, Sk)
+    assert S % bq == 0 and Sk % bk == 0, (S, bq, Sk, bk)
+    nq, nk = S // bq, Sk // bk
+
+    # layout: heads-major so the last two dims of every block are the MXU
+    # tile (seq, head_dim)
+    qh = q.transpose(0, 2, 1, 3).reshape(B, Hkv, G, S, D)
+    kh = k.transpose(0, 2, 1, 3)                    # (B, Hkv, Sk, D)
+    vh = v.transpose(0, 2, 1, 3)
+
+    grid = (B, Hkv, G, nq, nk)
+    kern = functools.partial(
+        _flash_fwd_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+        window=window, q_offset=q_offset)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, bq, D),
+                         lambda b, h, g, qi, ki: (b, h, g, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, g, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, g, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, bq, D),
+                               lambda b, h, g, qi, ki: (b, h, g, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, S, D), q.dtype),
+        scratch_shapes=[
+            _vmem((bq, 1)),       # running row max m
+            _vmem((bq, 1)),       # running denominator l
+            _vmem((bq, D)),       # fp32 output accumulator
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+def _vmem(shape):
+    """VMEM fp32 scratch spec."""
+    import jax.experimental.pallas.tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Deliberately naive (full-softmax attention; per-timestep sequential SSM
+scan): these are the ground truth the kernels must match in interpret mode,
+per-shape/per-dtype, in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """Full materialized-softmax GQA attention.
+
+    q: (B, S, H, D); k/v: (B, Sk, Hkv, D); H % Hkv == 0.
+    Returns (B, S, H, D) in q.dtype.
+    """
+    B, S, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qr = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k.astype(jnp.float32))
+    s = s * (D ** -0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((S, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos + (Sk - S)
+    if window:
+        mask &= kpos > qpos + (Sk - S) - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def ssm_scan_ref(xv: jax.Array, logdecay: jax.Array, Bmat: jax.Array,
+                 Cmat: jax.Array, h0: Optional[jax.Array] = None):
+    """Sequential (per-timestep) selective-SSM scan, SSD convention.
+
+    xv:       (B, S, nh, hd)   values (dt folded in)
+    logdecay: (B, S, nh)       log decay per step (<= 0)
+    Bmat:     (B, S, st)       input projection (shared across heads)
+    Cmat:     (B, S, st)       output projection
+    h0:       (B, nh, hd, st)  initial state or None
+
+    h[t] = exp(logdecay[t]) * h[t-1] + outer(xv[t], B[t])
+    y[t] = h[t] @ C[t]
+    Returns (y (B,S,nh,hd) in xv.dtype, h_final (B,nh,hd,st) fp32).
+    """
+    B, S, nh, hd = xv.shape
+    st = Bmat.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, hd, st), jnp.float32)
+
+    def step(h, inputs):
+        x_t, ld_t, b_t, c_t = inputs
+        h = h * jnp.exp(ld_t.astype(jnp.float32))[:, :, None, None]
+        h = h + jnp.einsum("bhd,bs->bhds", x_t.astype(jnp.float32),
+                           b_t.astype(jnp.float32))
+        y = jnp.einsum("bhds,bs->bhd", h, c_t.astype(jnp.float32))
+        return h, y
+
+    h_fin, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (xv.transpose(1, 0, 2, 3), logdecay.transpose(1, 0, 2),
+         Bmat.transpose(1, 0, 2), Cmat.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3).astype(xv.dtype)
+    return y, h_fin
+
+
+def mlstm_ref(q, k, v, ig, fg, state=None):
+    """Sequential mLSTM oracle (normalizer-augmented state), matching
+    models.xlstm semantics.  q/k: (B,S,nh,dqk); v: (B,S,nh,dv);
+    ig/fg: (B,S,nh) raw gate pre-activations."""
+    from repro.models.xlstm import mlstm_decode
+    B, S, nh, dqk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        H0 = jnp.zeros((B, nh, dqk, dv + 1), jnp.float32)
+        m0 = jnp.full((B, nh), -jnp.inf, jnp.float32)
+        state = (H0, m0)
+
+    def step(st, inputs):
+        q_t, k_t, v_t, i_t, f_t = inputs
+        h, st = mlstm_decode(q_t, k_t, v_t, i_t, f_t, st)
+        return st, h
+
+    state, hs = jax.lax.scan(
+        step, state,
+        (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+         v.transpose(1, 0, 2, 3), ig.transpose(1, 0, 2),
+         fg.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2, 3), state

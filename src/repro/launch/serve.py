@@ -1,0 +1,147 @@
+"""Batched serving driver: continuous prefill + decode with the measurement
+stack attached.
+
+Serving shape: a queue of synthetic requests (prompt lengths drawn from a
+mixture) is served in fixed-size decode batches.  Prefill runs per request
+batch; decode steps run against the shared KV cache.  Every GPU-side
+dispatch (prefill, decode, cache copy, sync) goes through
+``Profiler.dispatch`` so the §8.4-style analysis (sync_count vs
+kernel_count, idleness blame) has real material — examples/
+find_redundant_sync.py injects a deliberately redundant sync here and
+finds it with the derived metric, reproducing the PeleC case study.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.launch import steps as steps_mod
+from repro.models import transformer as T
+
+
+def serve(cfg: ModelConfig, *, n_requests: int = 8, batch: int = 4,
+          prompt_len: int = 32, gen_len: int = 16, seed: int = 0,
+          profile_dir: Optional[str] = None, redundant_sync: bool = False,
+          opts: Optional[T.ModelOptions] = None):
+    """Returns (generated tokens (n_requests, gen_len), profile paths)."""
+    opts = opts or T.ModelOptions(q_chunk=min(256, prompt_len),
+                                  kv_chunk=min(256, prompt_len),
+                                  ssm_chunk=min(64, prompt_len),
+                                  loss_chunk=min(256, prompt_len))
+    key = jax.random.PRNGKey(seed)
+    params = T.init_params(key, cfg)
+    max_len = prompt_len + gen_len
+
+    prefill_fn = jax.jit(steps_mod.make_prefill_step(cfg, None, opts))
+    decode_fn = jax.jit(steps_mod.make_decode_step(cfg, None, opts))
+
+    prof = None
+    mid_p = mid_d = None
+    if profile_dir:
+        from repro.core.profiler import Profiler
+        prof = Profiler(profile_dir, tracing=True, rng_seed=seed)
+        prof.start()
+
+    rng = np.random.default_rng(seed)
+    outs = []
+    n_batches = (n_requests + batch - 1) // batch
+    for bi in range(n_batches):
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len),
+                                        np.int32))
+        batch_in = {"tokens": toks}
+        # --- prefill ------------------------------------------------------
+        if prof is not None:
+            if mid_p is None:
+                mid_p = prof.register_module(
+                    "prefill", prefill_fn.lower(
+                        params, batch_in).compile().as_text())
+            with prof.dispatch("kernel", "prefill", stream=0,
+                               module_id=mid_p):
+                logits, cache = prefill_fn(params, batch_in)
+                jax.block_until_ready(logits)
+        else:
+            logits, cache = prefill_fn(params, batch_in)
+        # cache is sized prompt_len by prefill; decode needs max_len slots
+        cache = _grow_cache(cfg, cache, batch, max_len, prompt_len)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        gen = [tok]
+        # --- decode ---------------------------------------------------------
+        for t in range(gen_len - 1):
+            pos = jnp.int32(prompt_len + t)
+            if prof is not None:
+                if mid_d is None:
+                    mid_d = prof.register_module(
+                        "decode_step", decode_fn.lower(
+                            params, cache, pos,
+                            token=tok).compile().as_text())
+                with prof.dispatch("kernel", "decode_step", stream=0,
+                                   module_id=mid_d):
+                    logits, cache = decode_fn(params, cache, pos, token=tok)
+                    jax.block_until_ready(logits)
+                if redundant_sync:
+                    # §8.4.1: a sync with no kernel between it and the
+                    # previous sync — found by diff = sync - kernels
+                    with prof.dispatch("sync", "device_sync", stream=0):
+                        jax.block_until_ready(logits)
+                    with prof.dispatch("sync", "device_sync", stream=0):
+                        jax.block_until_ready(logits)
+            else:
+                logits, cache = decode_fn(params, cache, pos, token=tok)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            gen.append(tok)
+        outs.append(jnp.stack(gen, axis=1))
+    paths = None
+    if prof is not None:
+        prof.flush()
+        paths = prof.write()
+        prof.stop()
+    return jnp.concatenate(outs, axis=0)[:n_requests], paths
+
+
+def _grow_cache(cfg, cache, batch, max_len, cur_len):
+    """Pad prefill KV caches out to max_len slots (attention layers only)."""
+    def grow(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v") and leaf.ndim == 5 and \
+                leaf.shape[2] == cur_len:
+            pad = jnp.zeros(leaf.shape[:2] + (max_len - cur_len,)
+                            + leaf.shape[3:], leaf.dtype)
+            return jnp.concatenate([leaf, pad], axis=2)
+        return leaf
+    return jax.tree_util.tree_map_with_path(grow, cache)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--profile-dir", default=None)
+    args = ap.parse_args(argv)
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    t0 = time.monotonic()
+    toks, paths = serve(cfg, n_requests=args.requests, batch=args.batch,
+                        prompt_len=args.prompt_len, gen_len=args.gen_len,
+                        profile_dir=args.profile_dir)
+    dt = time.monotonic() - t0
+    n_tok = toks.shape[0] * toks.shape[1]
+    print(f"served {toks.shape[0]} requests x {toks.shape[1]} tokens "
+          f"in {dt:.1f}s ({n_tok / dt:.1f} tok/s)")
+    if paths:
+        print("profiles:", sorted(paths)[:4], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""ShapeDtypeStruct stand-ins for every model input (MULTI-POD DRY-RUN §2):
+weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shard_mod
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def _sds(shape, dtype, sh=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Abstract training/prefill batch for one architecture x shape."""
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict = {}
+    if cfg.frontend == "audio":
+        batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+    elif cfg.frontend == "vlm" and cfg.frontend_tokens:
+        F = min(cfg.frontend_tokens, S // 2)
+        batch["embeds"] = _sds((B, F, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = _sds((B, S - F), jnp.int32)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    if shape.kind == "train":
+        batch["labels"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def decode_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Abstract serve_step inputs: one new token + KV cache of seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        functools.partial(T.init_cache, cfg, B, S))
+    out: Dict = {"cache": cache, "pos": _sds((), jnp.int32)}
+    if cfg.frontend == "audio":
+        out["embed"] = _sds((B, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        out["token"] = _sds((B,), jnp.int32)
+    return out
+
+
+def params_struct(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(functools.partial(T.init_params, cfg=cfg), key)
+
+
+def opt_struct(params):
+    return jax.eval_shape(adamw.init, params)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                plan: Optional[shard_mod.ShardingPlan] = None,
+                kv_seq_axis: Optional[str] = None) -> Dict:
+    """Sharded abstract inputs for the step function this shape lowers.
+
+    train  -> {params, opt_state, batch}
+    prefill-> {params, batch}
+    decode -> {params, cache, token/embed, pos}
+    """
+    p_struct = params_struct(cfg)
+    if plan is not None and plan.mesh is not None:
+        p_sh = shard_mod.param_shardings(p_struct, cfg, plan)
+        p_struct = jax.tree.map(
+            lambda s, sh: _sds(s.shape, s.dtype, sh), p_struct, p_sh)
+    out: Dict = {"params": p_struct}
+    if shape.kind in ("train", "prefill"):
+        b_struct = batch_struct(cfg, shape)
+        if plan is not None and plan.mesh is not None:
+            b_sh = shard_mod.batch_shardings(b_struct, plan)
+            b_struct = jax.tree.map(
+                lambda s, sh: _sds(s.shape, s.dtype, sh), b_struct, b_sh)
+        out["batch"] = b_struct
+        if shape.kind == "train":
+            o_struct = opt_struct(params_struct(cfg))
+            if plan is not None and plan.mesh is not None:
+                o_sh = shard_mod.opt_shardings(
+                    o_struct, shard_mod.param_shardings(
+                        params_struct(cfg), cfg, plan))
+                o_struct = jax.tree.map(
+                    lambda s, sh: _sds(s.shape, s.dtype, sh),
+                    o_struct, o_sh)
+            out["opt_state"] = o_struct
+    else:
+        d = decode_struct(cfg, shape)
+        if plan is not None and plan.mesh is not None:
+            c_sh = shard_mod.cache_shardings(d["cache"], cfg, plan,
+                                             kv_seq_axis=kv_seq_axis)
+            d["cache"] = jax.tree.map(
+                lambda s, sh: _sds(s.shape, s.dtype, sh), d["cache"], c_sh)
+        out.update(d)
+    return out

@@ -1,0 +1,101 @@
+"""Step functions lowered by the dry-run and executed by the drivers."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingPlan
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.distributed import compression as comp_mod
+
+
+def make_train_step(cfg: ModelConfig, plan: Optional[ShardingPlan],
+                    opts: T.ModelOptions, opt_cfg: adamw.OptConfig,
+                    grad_compression: bool = False,
+                    n_microbatches: int = 1):
+    mesh_args = plan.moe_args() if plan is not None else None
+
+    def lf(p, b):
+        return T.loss_fn(p, cfg, b, mesh_args=mesh_args, opts=opts)
+
+    def finish(params, opt_state, loss, metrics, grads):
+        if grad_compression:
+            with jax.named_scope("grad_compression"):
+                grads = comp_mod.ef_compress_tree(grads)
+        with jax.named_scope("optimizer"):
+            new_p, new_o, om = adamw.update(opt_cfg, grads, opt_state,
+                                            params)
+        out_metrics = {"loss": loss, **metrics, **om}
+        return new_p, new_o, out_metrics
+
+    def train_step(params, opt_state, batch):
+        with jax.named_scope("fwd_bwd"):
+            (loss, metrics), grads = jax.value_and_grad(
+                lf, has_aux=True)(params, batch)
+        return finish(params, opt_state, loss, metrics, grads)
+
+    def train_step_micro(params, opt_state, batch):
+        """Gradient accumulation over n_microbatches (peak-memory lever:
+        activations scale with B/n_microbatches; §Perf A6)."""
+        n = n_microbatches
+
+        def split(x):
+            y = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+            if plan is not None and plan.mesh is not None:
+                y = jax.lax.with_sharding_constraint(
+                    y, jax.sharding.NamedSharding(
+                        plan.mesh, jax.sharding.PartitionSpec(
+                            None, *plan.batch_spec())))
+            return y
+        micro = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            gsum, loss_sum, aux = acc
+            with jax.named_scope("fwd_bwd_micro"):
+                (loss, metrics), g = jax.value_and_grad(
+                    lf, has_aux=True)(params, mb)
+            gsum = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return (gsum, loss_sum + loss,
+                    jax.tree.map(jnp.add, aux, metrics)), None
+
+        gzero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        azero = {"nll": jnp.zeros(()), "aux": jnp.zeros(()),
+                 "ntok": jnp.zeros(())}
+        (gsum, loss_sum, aux), _ = jax.lax.scan(
+            body, (gzero, jnp.zeros(()), azero), micro)
+        grads = jax.tree.map(lambda g: g / n, gsum)
+        metrics = {k: v / n for k, v in aux.items()}
+        metrics["ntok"] = aux["ntok"]
+        return finish(params, opt_state, loss_sum / n, metrics, grads)
+
+    return train_step if n_microbatches <= 1 else train_step_micro
+
+
+def make_prefill_step(cfg: ModelConfig, plan: Optional[ShardingPlan],
+                      opts: T.ModelOptions):
+    mesh_args = plan.moe_args() if plan is not None else None
+
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, batch.get("tokens"),
+                         batch.get("embeds"), mesh_args=mesh_args,
+                         opts=opts)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, plan: Optional[ShardingPlan],
+                     opts: T.ModelOptions):
+    mesh_args = plan.moe_args() if plan is not None else None
+
+    def decode_step(params, cache, pos, token=None, embed=None):
+        return T.decode_step(params, cfg, cache, token=token, embed=embed,
+                             pos=pos, mesh_args=mesh_args, opts=opts)
+
+    return decode_step

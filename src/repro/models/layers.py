@@ -1,0 +1,62 @@
+"""Shared model building blocks: norms, rotary embeddings, gated MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    with jax.named_scope("rms_norm"):
+        dt = x.dtype
+        x = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def rope_freqs(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """cos/sin tables for rotary embedding.  positions: (...,S) int32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    with jax.named_scope("rope"):
+        half = x.shape[-1] // 2
+        x1, x2 = x[..., :half], x[..., half:]
+        if cos.ndim == 2:  # (S, half) -> broadcast over batch & heads
+            cos_ = cos[None, :, None, :]
+            sin_ = sin[None, :, None, :]
+        else:              # (B, S, half)
+            cos_ = cos[:, :, None, :]
+            sin_ = sin[:, :, None, :]
+        cos_ = cos_.astype(x.dtype)
+        sin_ = sin_.astype(x.dtype)
+        return jnp.concatenate(
+            [x1 * cos_ - x2 * sin_, x2 * cos_ + x1 * sin_], axis=-1)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array,
+           ) -> jax.Array:
+    """Gated MLP: silu(x@w1) * (x@w3) @ w2."""
+    with jax.named_scope("ffn"):
+        g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w1))
+        u = jnp.einsum("...d,df->...f", x, w3)
+        return jnp.einsum("...f,fd->...d", g * u, w2)
+
+
+def pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (trace-time helper)."""
+    c = min(n, target)
+    while n % c:
+        c -= 1
+    return c
+
+
+def dense_init(key: jax.Array, shape, dtype, scale: float = 1.0) -> jax.Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)

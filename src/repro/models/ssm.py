@@ -1,0 +1,163 @@
+"""Selective SSM (Mamba-2 / SSD style) with chunkwise-parallel training and
+O(1)-state recurrent decode.
+
+Scalar-per-head decay (SSD formulation) so the chunkwise form is a masked
+linear-attention matmul — this maps onto the TPU MXU (see DESIGN.md hardware
+adaptation notes) and is also the Pallas kernel target (kernels/ssm_scan.py).
+
+State convention: h[t] = exp(dt[t]*A) * h[t-1] + dt[t] * outer(x[t], B[t]);
+y[t] = h[t] @ C[t] + D * x[t], per head, with B/C shared across heads
+(ngroups=1).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+CONV_W = 4  # depthwise causal conv width
+
+
+def init_ssm_params(key, d_model: int, n_heads: int, head_dim: int,
+                    state: int, dtype) -> dict:
+    inner = n_heads * head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * inner), dtype),
+        "conv": dense_init(ks[1], (CONV_W, inner), dtype, scale=1.0),
+        "wBC": dense_init(ks[2], (inner, 2 * state), dtype),
+        "wdt": dense_init(ks[3], (inner, n_heads), dtype),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "out_proj": dense_init(ks[4], (inner, d_model), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 carry: Optional[jax.Array] = None):
+    """Depthwise causal conv.  x: (B,S,inner), w: (CONV_W, inner).
+    carry: (B, CONV_W-1, inner) previous inputs (decode)."""
+    if carry is None:
+        pad = jnp.zeros((x.shape[0], CONV_W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = carry.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(CONV_W))
+    new_carry = xp[:, -(CONV_W - 1):]
+    return jax.nn.silu(out), new_carry
+
+
+def ssd_chunked(xv, logdecay, Bmat, Cmat, *, chunk: int,
+                h0: Optional[jax.Array] = None,
+                use_kernel: bool = False):
+    """Chunkwise-parallel scan.
+
+    xv:       (B, S, nh, hd)   values (dt already folded in)
+    logdecay: (B, S, nh)       log decay per step (<= 0)
+    Bmat:     (B, S, st)       input projection (shared across heads)
+    Cmat:     (B, S, st)       output projection
+    h0:       (B, nh, hd, st)  initial state or None
+    Returns (y (B,S,nh,hd), h_final).
+    """
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.ssm_scan(xv, logdecay, Bmat, Cmat, chunk=chunk,
+                                   h0=h0)
+    B, S, nh, hd = xv.shape
+    st = Bmat.shape[-1]
+    from repro.models.layers import pick_chunk
+    c = pick_chunk(S, chunk)
+    n = S // c
+    xc = xv.reshape(B, n, c, nh, hd)
+    ld = logdecay.reshape(B, n, c, nh).astype(jnp.float32)
+    Bc = Bmat.reshape(B, n, c, st)
+    Cc = Cmat.reshape(B, n, c, st)
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, hd, st), jnp.float32)
+
+    cum = jnp.cumsum(ld, axis=2)               # (B,n,c,nh)
+    total = cum[:, :, -1]                      # (B,n,nh)
+
+    with jax.named_scope("ssd_intra"):
+        # G[t,tau] = exp(cum_t - cum_tau) * (C_t . B_tau), tau <= t
+        cb = jnp.einsum("bncs,bnks->bnck", Cc, Bc,
+                        preferred_element_type=jnp.float32)  # (B,n,c,c)
+        dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,n,t,tau,nh)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        # mask BEFORE exp: exp of the (positive) upper-triangle deltas can
+        # overflow, and inf * 0 in the VJP of where() poisons d(logdecay)
+        dec = jnp.where(tri[None, None, :, :, None], dec, -jnp.inf)
+        g = jnp.exp(dec) * cb[..., None]
+        y_intra = jnp.einsum("bntkh,bnkhd->bnthd", g,
+                             xc.astype(jnp.float32))
+
+    with jax.named_scope("ssd_state"):
+        # per-chunk state contribution: sum_tau exp(total - cum_tau) v (x) B
+        w = jnp.exp(total[:, :, None, :] - cum)              # (B,n,c,nh)
+        sc = jnp.einsum("bnch,bnchd,bncs->bnhds",
+                        w, xc.astype(jnp.float32), Bc.astype(jnp.float32))
+
+    @jax.checkpoint
+    def step(h, inputs):
+        sc_i, total_i, cum_i, C_i = inputs
+        # y_inter[t] = exp(cum_t) * C_t . h
+        yi = jnp.einsum("bcs,bhds,bch->bchd",
+                        C_i.astype(jnp.float32), h, jnp.exp(cum_i))
+        h_new = h * jnp.exp(total_i)[:, :, None, None] + sc_i
+        return h_new, yi
+
+    with jax.named_scope("ssd_inter"):
+        h_fin, y_inter = jax.lax.scan(
+            step, h0,
+            (sc.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2),
+             cum.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3)))
+        y_inter = y_inter.transpose(1, 0, 2, 3, 4)  # (B,n,c,nh,hd)
+
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    return y.astype(xv.dtype), h_fin
+
+
+def mamba_forward(params, x, *, n_heads: int, head_dim: int, state: int,
+                  chunk: int = 256, ssm_state=None, conv_state=None,
+                  use_kernel: bool = False):
+    """Full mamba mixer.  x: (B,S,d).  Returns (y, (ssm_state, conv_state)).
+
+    For decode (S == 1) pass both states; for prefill/training leave None.
+    """
+    B, S, d = x.shape
+    inner = n_heads * head_dim
+    with jax.named_scope("mamba_in_proj"):
+        xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+        xin, z = jnp.split(xz, 2, axis=-1)
+    xin, new_conv = _causal_conv(xin, params["conv"], conv_state)
+    with jax.named_scope("mamba_bcdt"):
+        BC = jnp.einsum("bse,ek->bsk", xin, params["wBC"])
+        Bmat, Cmat = jnp.split(BC, 2, axis=-1)
+        dt = jax.nn.softplus(
+            jnp.einsum("bse,eh->bsh", xin, params["wdt"]).astype(jnp.float32)
+            + params["dt_bias"])                       # (B,S,nh)
+    a = -jnp.exp(params["A_log"])                      # (nh,) negative
+    logdecay = dt * a                                  # (B,S,nh)
+    xh = xin.reshape(B, S, n_heads, head_dim)
+    xv = xh * dt[..., None].astype(xh.dtype)
+
+    if S == 1 and ssm_state is not None:
+        # recurrent decode step
+        h = ssm_state * jnp.exp(logdecay)[:, 0, :, None, None]
+        h = h + jnp.einsum("bhd,bs->bhds", xv[:, 0].astype(jnp.float32),
+                           Bmat[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhds,bs->bhd", h, Cmat[:, 0].astype(jnp.float32))
+        y = y[:, None].astype(x.dtype)                 # (B,1,nh,hd)
+        h_fin = h
+    else:
+        y, h_fin = ssd_chunked(xv, logdecay, Bmat, Cmat, chunk=chunk,
+                               h0=ssm_state, use_kernel=use_kernel)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, inner) * jax.nn.silu(z)
+    with jax.named_scope("mamba_out_proj"):
+        out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, (h_fin, new_conv)

@@ -1,0 +1,268 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential recurrence).
+
+mLSTM cell:  C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+             h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+with exponential input gate i = exp(i~), forget gate f = sigmoid(f~), and the
+paper's max-state m_t stabilization.  We track the normalizer n as an extra
+"value" column of the matrix state (state shape (dqk, dv+1)) so the chunkwise
+form is a single masked linear-attention computation — the same skeleton as
+ssm.ssd_chunked (kernels/ssm_scan.py implements that skeleton for the SSD
+case; the mLSTM variant adds the max-stabilizer carry and stays in jnp).
+
+sLSTM is inherently sequential (h_{t-1} feeds the gate pre-activations via
+recurrent matrix R) and is implemented as a lax.scan over time — the paper
+itself notes it is not parallelizable; see EXPERIMENTS.md §Roofline for the
+consequences.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm_params(key, d_model: int, n_heads: int, dqk: int, dtype):
+    """xLSTM block: up-proj x2 (factor 2), conv-less variant, per-head qkv."""
+    inner = 2 * d_model
+    dv = inner // n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], (d_model, 2 * inner), dtype),
+        "wq": dense_init(ks[1], (inner, n_heads, dqk), dtype),
+        "wk": dense_init(ks[2], (inner, n_heads, dqk), dtype),
+        "wv": dense_init(ks[3], (inner, n_heads, dv), dtype),
+        "wif": dense_init(ks[4], (inner, n_heads, 2), dtype),
+        "b_if": jnp.zeros((n_heads, 2), jnp.float32),
+        "out_norm": jnp.ones((inner,), dtype),
+        "down_proj": dense_init(ks[5], (inner, d_model), dtype),
+    }
+
+
+def mlstm_chunked(q, k, v, ig, fg, *, chunk: int,
+                  state: Optional[Tuple] = None):
+    """Chunkwise-parallel mLSTM.
+
+    q,k: (B,S,nh,dqk); v: (B,S,nh,dv); ig/fg: (B,S,nh) raw gate
+    pre-activations.  state: (H (B,nh,dqk,dv+1), m (B,nh)) or None.
+    Returns (h (B,S,nh,dv), (H, m)).
+    """
+    B, S, nh, dqk = q.shape
+    dv = v.shape[-1]
+    from repro.models.layers import pick_chunk
+    c = pick_chunk(S, chunk)
+    n = S // c
+    scale = dqk ** -0.5
+    # normalizer tracked as an extra all-ones value column
+    v1 = jnp.concatenate(
+        [v.astype(jnp.float32), jnp.ones((B, S, nh, 1), jnp.float32)], -1)
+
+    qc = q.reshape(B, n, c, nh, dqk).astype(jnp.float32) * scale
+    kc = k.reshape(B, n, c, nh, dqk).astype(jnp.float32)
+    vc = v1.reshape(B, n, c, nh, dv + 1)
+    lf = jax.nn.log_sigmoid(fg.astype(jnp.float32)).reshape(B, n, c, nh)
+    li = ig.astype(jnp.float32).reshape(B, n, c, nh)
+
+    cum = jnp.cumsum(lf, axis=2)                    # (B,n,c,nh) cumulative logf
+    total = cum[:, :, -1]                           # (B,n,nh)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    if state is None:
+        H0 = jnp.zeros((B, nh, dqk, dv + 1), jnp.float32)
+        m0 = jnp.full((B, nh), -jnp.inf, jnp.float32)
+    else:
+        H0, m0 = state
+        m0 = jnp.where(jnp.isfinite(m0), m0, -jnp.inf)
+
+    @jax.checkpoint
+    def step(carry, inputs):
+        H, m = carry
+        q_i, k_i, v_i, cum_i, total_i, li_i = inputs
+        # intra-chunk log weights w[t,tau] = cum_t - cum_tau + li_tau
+        # (tau <= t) — computed PER CHUNK inside the scan body: hoisted
+        # out it materializes a (B, n, c, c, nh) tensor for all chunks at
+        # once (~1 GiB/device live + its traffic on xlstm prefill_32k;
+        # EXPERIMENTS.md §Perf C2)
+        dec_i = (cum_i[:, :, None, :] - cum_i[:, None, :, :]
+                 + li_i[:, None, :, :])                       # (B,c,c,nh)
+        dec_i = jnp.where(tri[None, :, :, None], dec_i, -jnp.inf)
+        m_intra_i = dec_i.max(axis=2)                         # (B,c,nh)
+        # combined stabilizer per row t
+        m_inter = cum_i + m[:, None, :]                       # (B,c,nh)
+        m_t = jnp.maximum(m_intra_i, m_inter)
+        m_t = jnp.where(jnp.isfinite(m_t), m_t, 0.0)
+        p = jnp.exp(dec_i - m_t[:, :, None, :])               # (B,c,c,nh)
+        # scores: (q_t . k_tau) weighted by stabilized gate products
+        s = jnp.einsum("bthq,bkhq->btkh", q_i, k_i)           # (B,c,c,nh)
+        h_intra = jnp.einsum("btkh,bkhd->bthd", s * p, v_i)   # (B,c,nh,dv+1)
+        w_inter = jnp.exp(m_inter - m_t)                      # (B,c,nh)
+        h_inter = jnp.einsum("bthq,bhqd,bth->bthd", q_i, H, w_inter)
+        h = h_intra + h_inter                                  # (B,c,nh,dv+1)
+        # state update
+        m_new = jnp.maximum(total_i + m,
+                            (total_i[:, None, :] - cum_i + li_i).max(axis=1))
+        Hc = jnp.einsum("bkhq,bkhd,bkh->bhqd", k_i, v_i,
+                        jnp.exp(total_i[:, None, :] - cum_i + li_i
+                                - m_new[:, None, :]))
+        H_new = H * jnp.exp(total_i + m - m_new)[:, :, None, None] + Hc
+        return (H_new, m_new), (h, m_t)
+
+    with jax.named_scope("mlstm_chunked"):
+        (H_fin, m_fin), (h, m_t) = jax.lax.scan(
+            step, (H0, m0),
+            (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+             vc.transpose(1, 0, 2, 3, 4), cum.transpose(1, 0, 2, 3),
+             total.transpose(1, 0, 2), li.transpose(1, 0, 2, 3)))
+    h = h.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, dv + 1)
+    m_t = m_t.transpose(1, 0, 2, 3).reshape(B, S, nh)
+    num = h[..., :dv]
+    den = h[..., dv]
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+    return (num / den[..., None]).astype(q.dtype), (H_fin, m_fin)
+
+
+def mlstm_decode(q, k, v, ig, fg, state):
+    """One-step recurrent mLSTM.  q/k: (B,nh,dqk); v: (B,nh,dv);
+    ig/fg: (B,nh).  state: (H (B,nh,dqk,dv+1), m (B,nh))."""
+    H, m = state
+    dqk = q.shape[-1]
+    lf = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    li = ig.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, li)
+    m_new = jnp.where(jnp.isfinite(m_new), m_new, li)
+    f_ = jnp.exp(lf + m - m_new)
+    f_ = jnp.where(jnp.isfinite(m), f_, 0.0)
+    i_ = jnp.exp(li - m_new)
+    v1 = jnp.concatenate(
+        [v.astype(jnp.float32), jnp.ones(v.shape[:-1] + (1,), jnp.float32)],
+        -1)
+    H_new = H * f_[..., None, None] + i_[..., None, None] * jnp.einsum(
+        "bhq,bhd->bhqd", k.astype(jnp.float32), v1)
+    hq = jnp.einsum("bhqd,bhq->bhd", H_new,
+                    q.astype(jnp.float32) * dqk ** -0.5)
+    dv = v.shape[-1]
+    num, den = hq[..., :dv], hq[..., dv]
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+    return (num / den[..., None]).astype(q.dtype), (H_new, m_new)
+
+
+def mlstm_forward(params, x, *, n_heads: int, dqk: int, chunk: int = 256,
+                  state=None, use_kernel: bool = False):
+    """mLSTM block mixer.  x: (B,S,d).  Returns (y, state)."""
+    B, S, d = x.shape
+    inner = 2 * d
+    with jax.named_scope("mlstm_up_proj"):
+        ug = jnp.einsum("bsd,de->bse", x, params["up_proj"])
+        u, gate = jnp.split(ug, 2, axis=-1)
+    q = jnp.einsum("bse,ehq->bshq", u, params["wq"])
+    k = jnp.einsum("bse,ehq->bshq", u, params["wk"])
+    v = jnp.einsum("bse,ehd->bshd", u, params["wv"])
+    if_ = jnp.einsum("bse,ehg->bshg", u, params["wif"]).astype(jnp.float32) \
+        + params["b_if"]
+    ig, fg = if_[..., 0], if_[..., 1]
+    if S == 1 and state is not None:
+        h, new_state = mlstm_decode(q[:, 0], k[:, 0], v[:, 0],
+                                    ig[:, 0], fg[:, 0], state)
+        h = h[:, None]
+    else:
+        h, new_state = mlstm_chunked(q, k, v, ig, fg, chunk=chunk,
+                                     state=state)
+    h = h.reshape(B, S, inner)
+    h = rms_norm(h, params["out_norm"]) * jax.nn.silu(gate)
+    with jax.named_scope("mlstm_down_proj"):
+        y = jnp.einsum("bse,ed->bsd", h, params["down_proj"])
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm_params(key, d_model: int, n_heads: int, dtype):
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 5)
+    # ~4/3 proj factor, rounded up to 64 for TP divisibility / MXU tiles
+    f_up = -(-int(d_model * 4 / 3) // 64) * 64
+    return {
+        "wx": dense_init(ks[0], (d_model, 4 * d_model), dtype),
+        # recurrent block-diagonal per head: (nh, dh, 4*dh)
+        "r": dense_init(ks[1], (n_heads, dh, 4 * dh), dtype),
+        "b": jnp.zeros((4 * d_model,), jnp.float32),
+        "out_norm": jnp.ones((d_model,), dtype),
+        "up1": dense_init(ks[2], (d_model, f_up), dtype),
+        "up2": dense_init(ks[3], (d_model, f_up), dtype),
+        "down": dense_init(ks[4], (f_up, d_model), dtype),
+    }
+
+
+def _slstm_cell(params, xt, state, n_heads: int):
+    """One sLSTM step.  xt: (B, 4d) preactivation from W x.
+    state: dict(c, n, h, m) each (B, d) fp32."""
+    B = xt.shape[0]
+    d = xt.shape[-1] // 4
+    dh = d // n_heads
+    h_heads = state["h"].reshape(B, n_heads, dh)
+    rec = jnp.einsum("bhe,hef->bhf", h_heads.astype(params["r"].dtype),
+                     params["r"]).reshape(B, 4 * d)
+    pre = (xt + rec).astype(jnp.float32) + params["b"]
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    lf = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(lf + state["m"], i)
+    i_ = jnp.exp(i - m_new)
+    f_ = jnp.exp(lf + state["m"] - m_new)
+    c_new = f_ * state["c"] + i_ * z
+    n_new = f_ * state["n"] + i_
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_forward(params, x, *, n_heads: int, state=None,
+                  time_block: int = 16):
+    """sLSTM block mixer (sequential).  x: (B,S,d).  Returns (y, state).
+
+    ``time_block``: timesteps per scan iteration (inner loop unrolled).
+    The recurrence is inherently sequential, but the recurrent matrix
+    ``r`` need only be fetched once per iteration — at time_block=1 the
+    32k-step long-context shapes re-read r every step (~157 TB of pure
+    weight traffic on xlstm prefill_32k; §Perf C3).  On TPU the unrolled
+    block also keeps r resident in VMEM (2.4 MB).
+    """
+    B, S, d = x.shape
+    if state is None:
+        z = jnp.zeros((B, d), jnp.float32)
+        state = {"c": z, "n": z, "h": z,
+                 "m": jnp.full((B, d), -1e30, jnp.float32)}
+    with jax.named_scope("slstm_x_proj"):
+        xp = jnp.einsum("bsd,de->bse", x, params["wx"])  # (B,S,4d)
+
+    k = time_block
+    while S % k:
+        k //= 2
+    n = S // k
+
+    def step(st, xt_blk):
+        # xt_blk: (k, B, 4d); inner python loop unrolls so XLA loads the
+        # recurrent weights once per outer iteration
+        hs = []
+        for i in range(k):
+            st = _slstm_cell(params, xt_blk[i], st, n_heads)
+            hs.append(st["h"])
+        return st, jnp.stack(hs)
+
+    with jax.named_scope("slstm_scan"):
+        xb = xp.transpose(1, 0, 2).reshape(n, k, B, 4 * d)
+        state, hs = jax.lax.scan(step, state, xb)
+    h = hs.reshape(S, B, d).transpose(1, 0, 2).astype(x.dtype)   # (B,S,d)
+    h = rms_norm(h, params["out_norm"])
+    with jax.named_scope("slstm_ffn"):
+        u = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, params["up1"]))
+        g = jnp.einsum("bsd,df->bsf", h, params["up2"])
+        y = jnp.einsum("bsf,fd->bsd", u * g, params["down"])
+    return y, state

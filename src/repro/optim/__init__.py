@@ -1,0 +1,2 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptConfig, AdamState, init, update, schedule, global_norm)

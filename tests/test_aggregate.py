@@ -1,0 +1,147 @@
+"""Streaming aggregation (paper §6.1): unification, expansion, statistics,
+sparse outputs, trace conversion."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.aggregate import Database, GlobalTree, aggregate
+from repro.core.cct import CCT, Frame, GPU_OP, HOST, PLACEHOLDER
+from repro.core.metrics import default_registry
+from repro.core.profmt import write_profile
+from repro.core.sparse import CMSReader, PMSReader
+from repro.core.trace import TraceWriter, read_trace
+
+
+def write_rank_profiles(tmp_path, n=6):
+    """n profiles sharing structure: root -> main -> {step: kernel}."""
+    reg = default_registry()
+    paths = []
+    for r in range(n):
+        cct = CCT()
+        main = cct.insert_path([Frame(HOST, "main", "app.py", 1)])
+        step = cct.insert_path([Frame(HOST, "step", "app.py", 10)],
+                               parent=main)
+        ph = cct.get_or_insert(step, Frame(PLACEHOLDER, "kernel:train", "0",
+                                           0))
+        ph.metrics.add(reg.kind("gpu_kernel"), "invocations", 1 + r)
+        ph.metrics.add(reg.kind("gpu_kernel"), "time_ns", 100.0 * (r + 1))
+        main.metrics.add(reg.kind("cpu"), "time_ns", 1000.0)
+        p = str(tmp_path / f"profile_r{r}_t0.rpro")
+        write_profile(p, cct, reg, {"rank": r, "thread": 0, "type": "cpu"},
+                      [])
+        # a trace aligned with the profile
+        tw = TraceWriter(p.replace(".rpro", ".rtrc"), {"rank": r})
+        tw.append(0, 50, step.node_id)
+        tw.append(50, 80, ph.node_id)
+        tw.close()
+        paths.append(p)
+    return paths, reg
+
+
+@pytest.mark.parametrize("n_ranks,n_threads", [(1, 1), (3, 2), (4, 4)])
+def test_aggregate_stats(tmp_path, n_ranks, n_threads):
+    paths, reg = write_rank_profiles(tmp_path)
+    db = aggregate(paths, str(tmp_path / f"db{n_ranks}_{n_threads}"),
+                   n_ranks=n_ranks, n_threads=n_threads)
+    mid = db.metric_id("gpu_kernel/invocations")
+    # find the placeholder context
+    ph = [i for i, f in enumerate(db.frames) if f.kind == PLACEHOLDER]
+    assert len(ph) == 1, "same call path must unify into one global node"
+    i = ph[0]
+    assert db.stats["sum"][i, mid] == pytest.approx(sum(range(1, 7)))
+    assert db.stats["min"][i, mid] == 1
+    assert db.stats["max"][i, mid] == 6
+    assert db.stats["mean"][i, mid] == pytest.approx(3.5)
+    std = np.std(np.arange(1, 7))
+    assert db.stats["std"][i, mid] == pytest.approx(std, rel=1e-6)
+    assert db.stats["cov"][i, mid] == pytest.approx(std / 3.5, rel=1e-6)
+
+
+def test_inclusive_propagation(tmp_path):
+    """Metrics flow up to ancestors (inclusive view)."""
+    paths, reg = write_rank_profiles(tmp_path)
+    db = aggregate(paths, str(tmp_path / "db"), n_ranks=2, n_threads=2)
+    tmid = db.metric_id("gpu_kernel/time_ns")
+    root_val = db.stats["sum"][0, tmid]
+    assert root_val == pytest.approx(sum(100.0 * (r + 1) for r in range(6)))
+
+
+def test_sparse_cube_outputs(tmp_path):
+    paths, reg = write_rank_profiles(tmp_path)
+    out = str(tmp_path / "db")
+    db = aggregate(paths, out, n_ranks=2, n_threads=2)
+    cms = CMSReader(db.cms_path())
+    pms = PMSReader(db.pms_path())
+    mid = db.metric_id("gpu_kernel/invocations")
+    ph = [i for i, f in enumerate(db.frames) if f.kind == PLACEHOLDER][0]
+    pids, vals = cms.metric_values(ph, mid)
+    assert sorted(vals) == [1, 2, 3, 4, 5, 6]
+    for p, v in zip(pids, vals):
+        assert pms.context_values(int(p), ph)[mid] == v
+
+
+def test_trace_conversion(tmp_path):
+    paths, reg = write_rank_profiles(tmp_path)
+    traces = [p.replace(".rpro", ".rtrc") for p in paths]
+    out = str(tmp_path / "db")
+    db = aggregate(paths, out, n_ranks=2, n_threads=2, trace_paths=traces)
+    td = read_trace(os.path.join(out, os.path.basename(traces[0])))
+    # converted ctx ids must be valid global ids
+    assert all(0 <= c < len(db.frames) for c in td.ctx)
+    names = {db.frames[int(c)].name for c in td.ctx}
+    assert "step" in names and "kernel:train" in names
+
+
+def test_database_load_roundtrip(tmp_path):
+    paths, _ = write_rank_profiles(tmp_path)
+    out = str(tmp_path / "db")
+    db = aggregate(paths, out, n_ranks=1, n_threads=2)
+    db2 = Database.load(out)
+    assert db2.metrics == db.metrics
+    assert len(db2.frames) == len(db.frames)
+    np.testing.assert_allclose(db2.stats["sum"], db.stats["sum"])
+
+
+def test_expansion_against_structure(tmp_path):
+    """Phase 3: flat GPU_OP frames expand into scope/loop/op chains."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.structure import parse_hlo
+    from repro.core.aggregate import make_expander
+
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ c), None
+        y, _ = jax.lax.scan(body, x, None, length=4)
+        return y
+
+    hlo = jax.jit(f).lower(jnp.ones((16, 16))).compile().as_text()
+    mod = parse_hlo(hlo, name="f")
+    reg = default_registry()
+    cct = CCT()
+    ph = cct.insert_path([Frame(HOST, "main", "app.py", 1),
+                          Frame(PLACEHOLDER, "kernel:f", "0", 0)])
+    ops = mod.all_ops()
+    dot = next(i for i, o in enumerate(ops) if o.opcode == "dot")
+    gnode = cct.insert_path([Frame(GPU_OP, "dot", "f", dot)], parent=ph)
+    gnode.metrics.add(reg.kind("gpu_inst"), "samples", 7)
+    p = str(tmp_path / "p.rpro")
+    write_profile(p, cct, reg, {"rank": 0}, ["f"])
+    db = aggregate([p], str(tmp_path / "db"), n_ranks=1, n_threads=1,
+                   structures={"f": mod})
+    kinds = {f.kind for f in db.frames}
+    assert "gpu_op" in kinds
+    sampled = [i for i, f in enumerate(db.frames) if f.kind == "gpu_op"]
+    mid = db.metric_id("gpu_inst/samples")
+    assert db.stats["sum"][sampled, mid].sum() == 7
+
+
+def test_merge_tree_mapping():
+    t1, t2 = GlobalTree(), GlobalTree()
+    a1 = t1.child(0, Frame(HOST, "a", "", 0))
+    a2 = t2.child(0, Frame(HOST, "a", "", 0))
+    b2 = t2.child(a2, Frame(HOST, "b", "", 0))
+    mapping = t1.merge_tree(t2)
+    assert mapping[a2] == a1
+    assert t1.frames[int(mapping[b2])].name == "b"

@@ -1,0 +1,104 @@
+"""Wait-free SPSC queue / channel tests (paper §4.1)."""
+import threading
+from collections import deque
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.channels import (EMPTY, BidirectionalChannel, ChannelSet,
+                                 SpscQueue)
+
+
+def test_fifo_basic():
+    q = SpscQueue(4)
+    assert q.try_pop() is EMPTY
+    assert q.try_push(1) and q.try_push(2) and q.try_push(3) and q.try_push(4)
+    assert not q.try_push(5), "queue of capacity 4 must reject the 5th"
+    assert [q.try_pop() for _ in range(4)] == [1, 2, 3, 4]
+    assert q.try_pop() is EMPTY
+    # wraparound
+    for i in range(10):
+        assert q.try_push(i)
+        assert q.try_pop() == i
+
+
+@given(st.lists(st.one_of(st.integers(0, 1000),
+                          st.just("pop")), max_size=200),
+       st.integers(1, 8))
+@settings(max_examples=200, deadline=None)
+def test_model_based(ops, cap):
+    """Queue behaves exactly like a bounded deque."""
+    q = SpscQueue(cap)
+    model = deque()
+    for op in ops:
+        if op == "pop":
+            got = q.try_pop()
+            if model:
+                assert got == model.popleft()
+            else:
+                assert got is EMPTY
+        else:
+            ok = q.try_push(op)
+            assert ok == (len(model) < cap)
+            if ok:
+                model.append(op)
+    assert len(q) == len(model)
+
+
+def test_threaded_stress():
+    """1M items across a producer and a consumer thread, no locks."""
+    q = SpscQueue(1024)
+    N = 100_000
+    out = []
+
+    def producer():
+        i = 0
+        while i < N:
+            if q.try_push(i):
+                i += 1
+
+    def consumer():
+        while len(out) < N:
+            item = q.try_pop()
+            if item is not EMPTY:
+                out.append(item)
+
+    tp = threading.Thread(target=producer)
+    tc = threading.Thread(target=consumer)
+    tp.start(); tc.start()
+    tp.join(timeout=60); tc.join(timeout=60)
+    assert out == list(range(N)), "FIFO order must survive concurrency"
+
+
+def test_bidirectional_channel_roles():
+    ch = BidirectionalChannel(8)
+    assert ch.operation is ch.forward
+    assert ch.activity is ch.backward
+    ch.operation.try_push(("I", "P"))
+    assert ch.operation.try_pop() == ("I", "P")
+
+
+def test_channel_set_per_thread():
+    cs = ChannelSet()
+    chans = {}
+
+    def worker(tid):
+        chans[tid] = cs.channel_for(tid)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len({id(c) for c in chans.values()}) == 8
+    # stable on re-request
+    assert cs.channel_for(3) is chans[3]
+
+
+def test_push_failure_counts():
+    q = SpscQueue(1)
+    q.try_push(1)
+    q.try_push(2)
+    q.try_push(3)
+    assert q.push_failures == 2
+    assert q.pushes == 1

@@ -1,0 +1,48 @@
+"""Flash-decode Pallas kernel vs the validated jnp decode attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.models.attention import decode_attention
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Hkv,D,Smax,bk", [
+    (1, 4, 4, 64, 512, 256),    # MHA
+    (2, 8, 2, 64, 1024, 512),   # GQA 4:1
+    (1, 8, 1, 32, 512, 128),    # MQA
+])
+def test_flash_decode_vs_ref(B, H, Hkv, D, Smax, bk, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = (jax.random.normal(ks[0], (B, H, D)) * 0.5).astype(dtype)
+    kc = (jax.random.normal(ks[1], (B, Smax, Hkv, D)) * 0.5).astype(dtype)
+    vc = (jax.random.normal(ks[2], (B, Smax, Hkv, D)) * 0.5).astype(dtype)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+    for length in (1, Smax // 3, Smax):
+        out = ops.flash_decode(q, kc, vc, jnp.int32(length), block_kv=bk)
+        want = decode_attention(q, kc, vc, jnp.int32(length))
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   err_msg=f"len={length}", **tol)
+
+
+def test_flash_decode_blocks_beyond_length_are_skipped():
+    """Stale data beyond `length` (reused cache buffers hold the previous
+    request's KV) must not leak into the output."""
+    ks = jax.random.split(KEY, 3)
+    B, H, D, Smax = 1, 2, 16, 256
+    q = jax.random.normal(ks[0], (B, H, D))
+    kc = jax.random.normal(ks[1], (B, Smax, H, D))
+    vc = jax.random.normal(ks[2], (B, Smax, H, D))
+    kc_poison = kc.at[:, 100:].set(1e9)
+    vc_poison = vc.at[:, 100:].set(-1e9)
+    out = ops.flash_decode(q, kc_poison, vc_poison, jnp.int32(100),
+                           block_kv=64)
+    want = decode_attention(q, kc, vc, jnp.int32(100))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

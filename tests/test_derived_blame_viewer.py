@@ -1,0 +1,154 @@
+"""Derived metrics (§4.5/§7.1), idleness blame (§7.2/§8.5), viewer (§7)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blame import blame_gpu_idleness, blame_report
+from repro.core.derived import (DerivedMetric, GPU_UTILIZATION, SYNC_DIFF,
+                                WARP_ISSUE_RATE, sanitize)
+from repro.core.trace import TraceData
+
+
+# ---------------------------------------------------------------------------
+# derived metrics
+# ---------------------------------------------------------------------------
+def test_formula_basics():
+    m = DerivedMetric("d", "a / (a + b)")
+    out = m.evaluate({"a": np.array([1.0, 2.0]), "b": np.array([1.0, 2.0])})
+    np.testing.assert_allclose(out, [0.5, 0.5])
+
+
+def test_divide_by_zero_yields_zero():
+    m = DerivedMetric("d", "a / b")
+    out = m.evaluate({"a": np.array([1.0]), "b": np.array([0.0])})
+    np.testing.assert_allclose(out, [0.0])
+
+
+def test_paper_formulas():
+    cols = {
+        "gpu_inst/samples": np.array([80.0]),
+        "gpu_inst/stall_compute": np.array([10.0]),
+        "gpu_inst/stall_memory": np.array([10.0]),
+        "gpu_inst/stall_collective": np.array([0.0]),
+        "gpu_sync/invocations": np.array([5.0]),
+        "gpu_kernel/invocations": np.array([3.0]),
+        "gpu_kernel/time_ns": np.array([300.0]),
+        "cpu/time_ns": np.array([700.0]),
+    }
+    assert WARP_ISSUE_RATE.evaluate(cols)[0] == pytest.approx(0.8)
+    assert SYNC_DIFF.evaluate(cols)[0] == pytest.approx(2.0)
+    assert GPU_UTILIZATION.evaluate(cols)[0] == pytest.approx(0.3)
+
+
+@pytest.mark.parametrize("bad", [
+    "__import__('os')", "a.b", "lambda: 1", "[1,2]", "open('x')",
+    "exec('x')", "a if (x := 3) else b",
+])
+def test_formula_rejects_unsafe(bad):
+    with pytest.raises((ValueError, SyntaxError)):
+        DerivedMetric("bad", bad)
+
+
+def test_whitelisted_funcs_and_compare():
+    m = DerivedMetric("d", "where(a > b, sqrt(a), max(a, b))")
+    out = m.evaluate({"a": np.array([4.0, 1.0]), "b": np.array([1.0, 9.0])})
+    np.testing.assert_allclose(out, [2.0, 9.0])
+
+
+@given(st.lists(st.floats(0.1, 100), min_size=1, max_size=8),
+       st.lists(st.floats(0.1, 100), min_size=1, max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_formula_matches_numpy(a, b):
+    n = min(len(a), len(b))
+    a, b = np.array(a[:n]), np.array(b[:n])
+    m = DerivedMetric("d", "(a * 2 + b) / (a + b) - a ** 0.5")
+    np.testing.assert_allclose(m.evaluate({"a": a, "b": b}),
+                               (a * 2 + b) / (a + b) - a ** 0.5)
+
+
+# ---------------------------------------------------------------------------
+# blame analysis
+# ---------------------------------------------------------------------------
+def tr(ident, records):
+    arr = np.asarray(records, np.int64).reshape(-1, 3)
+    return TraceData(ident, arr[:, 0], arr[:, 1], arr[:, 2])
+
+
+def test_blame_simple():
+    # GPU busy [0, 10); idle [10, 30) while cpu ctx 7 active;
+    gpu = [tr({"stream": 0}, [(0, 10, 1)])]
+    cpu = [tr({"thread": 0}, [(0, 30, 7)])]
+    blame, idle = blame_gpu_idleness(cpu, gpu)
+    assert idle == 20
+    assert blame == {7: 20.0}
+
+
+def test_blame_split_across_threads():
+    gpu = [tr({"stream": 0}, [(0, 10, 1)])]
+    cpu = [tr({"thread": 0}, [(0, 30, 7)]),
+           tr({"thread": 1}, [(10, 20, 8)])]
+    blame, idle = blame_gpu_idleness(cpu, gpu)
+    assert idle == 20
+    # [10,20): both active -> 5 each; [20,30): only ctx7 -> 10
+    assert blame[7] == pytest.approx(15.0)
+    assert blame[8] == pytest.approx(5.0)
+
+
+def test_blame_no_idle_when_any_stream_busy():
+    gpu = [tr({"stream": 0}, [(0, 10, 1)]),
+           tr({"stream": 1}, [(5, 30, 2)])]
+    cpu = [tr({"thread": 0}, [(0, 30, 7)])]
+    blame, idle = blame_gpu_idleness(cpu, gpu)
+    assert idle == 0
+    assert blame == {}
+
+
+def test_blame_report_ranks(tmp_path):
+    from repro.core.aggregate import aggregate
+    from tests.test_aggregate import write_rank_profiles
+    paths, _ = write_rank_profiles(tmp_path)
+    db = aggregate(paths, str(tmp_path / "db"), n_ranks=1, n_threads=1)
+    blame = {1: 60.0, 2: 40.0}
+    rows = blame_report(blame, 100.0, db)
+    assert rows[0][1] == pytest.approx(0.6)
+    assert rows[0][1] >= rows[1][1]
+
+
+# ---------------------------------------------------------------------------
+# viewer
+# ---------------------------------------------------------------------------
+def test_viewer_views(tmp_path):
+    from repro.core.aggregate import aggregate
+    from repro.core.sparse import CMSReader
+    from repro.core import viewer
+    from tests.test_aggregate import write_rank_profiles
+    paths, _ = write_rank_profiles(tmp_path)
+    db = aggregate(paths, str(tmp_path / "db"), n_ranks=2, n_threads=2)
+
+    td = viewer.top_down(db, "gpu_kernel/time_ns")
+    assert "TOP-DOWN" in td and "kernel:train" in td
+    fl = viewer.flat(db, "gpu_kernel/time_ns")
+    assert "FLAT" in fl and "%" in fl
+    bu = viewer.bottom_up(db, "gpu_kernel/time_ns")
+    assert "BOTTOM-UP" in bu
+    # thread-centric plot
+    cms = CMSReader(db.cms_path())
+    ph = [i for i, f in enumerate(db.frames) if f.kind == "placeholder"][0]
+    pids, vals = viewer.thread_plot(db, cms, ph, "gpu_kernel/time_ns")
+    assert len(pids) == 6 and sorted(vals)[0] == 100.0
+
+
+def test_trace_statistic(tmp_path):
+    from repro.core.aggregate import aggregate
+    from repro.core import viewer
+    from repro.core.trace import read_trace
+    import os
+    from tests.test_aggregate import write_rank_profiles
+    paths, _ = write_rank_profiles(tmp_path)
+    traces = [p.replace(".rpro", ".rtrc") for p in paths]
+    out = str(tmp_path / "db")
+    db = aggregate(paths, out, n_ranks=1, n_threads=1, trace_paths=traces)
+    tds = [read_trace(os.path.join(out, os.path.basename(t)))
+           for t in traces]
+    rows = viewer.trace_statistic(tds, db, depth=1)
+    assert rows and abs(sum(v for _, v in rows) - 1.0) < 1e-6

@@ -1,0 +1,107 @@
+"""Profile file format roundtrip (paper §4.6 Fig. 3b) + CCT + metrics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cct import CCT, Frame, HOST, PLACEHOLDER, unwind_host_stack
+from repro.core.metrics import default_registry
+from repro.core.profmt import (dense_profile_nbytes, read_profile,
+                               write_profile)
+
+
+def build_cct(rng, registry, n_paths=10, depth=4):
+    cct = CCT()
+    kinds = registry.kinds
+    for _ in range(n_paths):
+        frames = [Frame(HOST, f"f{rng.integers(5)}", f"m{rng.integers(3)}.py",
+                        int(rng.integers(100)))
+                  for _ in range(int(rng.integers(1, depth)))]
+        node = cct.insert_path(frames)
+        k = kinds[int(rng.integers(len(kinds)))]
+        m = k.metrics[int(rng.integers(len(k.metrics)))]
+        node.metrics.add(k, m, float(rng.integers(1, 50)))
+    return cct
+
+
+def test_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    reg = default_registry()
+    cct = build_cct(rng, reg)
+    ident = {"host": "h0", "rank": 3, "thread": 1, "type": "cpu"}
+    path = str(tmp_path / "p.rpro")
+    sizes = write_profile(path, cct, reg, ident, ["mod_a"])
+    prof = read_profile(path)
+    assert prof.identity == ident
+    assert prof.load_modules == ["mod_a"]
+    assert prof.metrics == reg.metric_names
+    assert len(prof.node_ids) == cct.n_nodes
+    # every node's metrics survive
+    by_id = cct.node_by_id()
+    for nid in prof.node_ids:
+        want = dict(by_id[int(nid)].metrics.nonzero_items(reg))
+        assert prof.node_values(int(nid)) == pytest.approx(want)
+
+
+def test_parents_precede_children(tmp_path):
+    """The aggregator relies on creation order being topological."""
+    rng = np.random.default_rng(1)
+    reg = default_registry()
+    cct = build_cct(rng, reg, n_paths=30)
+    path = str(tmp_path / "p.rpro")
+    write_profile(path, cct, reg, {}, [])
+    prof = read_profile(path)
+    seen = set()
+    pos = {int(n): i for i, n in enumerate(prof.node_ids)}
+    for nid, par in zip(prof.node_ids, prof.parents):
+        if par >= 0:
+            assert pos[int(par)] < pos[int(nid)]
+
+
+def test_sparse_only_nonzero(tmp_path):
+    """Fig. 3b: only non-zero metric values are stored."""
+    reg = default_registry()
+    cct = CCT()
+    n = cct.insert_path([Frame(HOST, "f", "m.py", 1)])
+    n.metrics.add(reg.kind("cpu"), "time_ns", 5.0)
+    big = cct.insert_path([Frame(HOST, "g", "m.py", 2)])  # no metrics
+    path = str(tmp_path / "p.rpro")
+    write_profile(path, cct, reg, {}, [])
+    prof = read_profile(path)
+    assert len(prof.values) == 1
+    assert prof.node_values(big.node_id) == {}
+    # dense expansion would cost n_nodes x n_metrics x 8
+    assert dense_profile_nbytes(cct.n_nodes, reg.n_metrics) == \
+        cct.n_nodes * reg.n_metrics * 8
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 40))
+@settings(max_examples=25, deadline=None)
+def test_roundtrip_property(tmp_path_factory, seed, n_paths):
+    tmp = tmp_path_factory.mktemp("prof")
+    rng = np.random.default_rng(seed)
+    reg = default_registry()
+    cct = build_cct(rng, reg, n_paths=n_paths)
+    path = str(tmp / "p.rpro")
+    write_profile(path, cct, reg, {"rank": 0}, [])
+    prof = read_profile(path)
+    total_written = sum(
+        v for n in cct.nodes() for _, v in n.metrics.nonzero_items(reg))
+    assert float(prof.values.sum()) == pytest.approx(total_written)
+
+
+def test_unwind_host_stack_prunes_tool_frames():
+    def inner():
+        return unwind_host_stack()
+    frames = inner()
+    assert frames, "must capture the test frame"
+    assert all("repro/core" not in f.module for f in frames)
+    assert frames[-1].name == "inner"
+
+
+def test_cct_dedup():
+    cct = CCT()
+    f = [Frame(HOST, "a", "x.py", 1), Frame(HOST, "b", "x.py", 2)]
+    n1 = cct.insert_path(f)
+    n2 = cct.insert_path(f)
+    assert n1 is n2
+    assert cct.n_nodes == 3  # root + a + b

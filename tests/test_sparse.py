@@ -1,0 +1,103 @@
+"""PMS / CMS sparse-cube formats (paper §6.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparse import (CMSReader, PMSReader, ProfileValues,
+                               dense_cube_nbytes, write_cms, write_pms)
+
+
+def make_profiles(rng, n_profiles, n_ctx, n_metrics, density=0.1):
+    profs = []
+    dense = np.zeros((n_profiles, n_ctx, n_metrics))
+    for p in range(n_profiles):
+        mask = rng.random((n_ctx, n_metrics)) < density
+        ctx, met = np.nonzero(mask)
+        vals = rng.random(len(ctx)) + 0.5
+        dense[p, ctx, met] = vals
+        profs.append(ProfileValues(p, ctx.astype(np.uint32),
+                                   met.astype(np.uint32), vals))
+    return profs, dense
+
+
+def test_cms_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    profs, dense = make_profiles(rng, 5, 40, 12)
+    path = str(tmp_path / "m.cms")
+    info = write_cms(path, profs, n_workers=3)
+    r = CMSReader(path)
+    assert r.header["n_profiles"] == 5
+    for ctx in range(40):
+        for met in range(12):
+            for p in range(5):
+                assert r.lookup(ctx, met, p) == pytest.approx(
+                    dense[p, ctx, met]), (ctx, met, p)
+
+
+def test_cms_metric_values_vector(tmp_path):
+    rng = np.random.default_rng(1)
+    profs, dense = make_profiles(rng, 8, 20, 6, density=0.3)
+    path = str(tmp_path / "m.cms")
+    write_cms(path, profs)
+    r = CMSReader(path)
+    pids, vals = r.metric_values(3, 2)
+    want = {p: dense[p, 3, 2] for p in range(8) if dense[p, 3, 2] != 0}
+    assert {int(p): float(v) for p, v in zip(pids, vals)} == pytest.approx(
+        want)
+
+
+def test_pms_roundtrip(tmp_path):
+    rng = np.random.default_rng(2)
+    profs, dense = make_profiles(rng, 4, 30, 10)
+    path = str(tmp_path / "m.pms")
+    write_pms(path, profs, n_workers=2)
+    r = PMSReader(path)
+    for p in range(4):
+        for ctx in range(30):
+            got = r.context_values(p, ctx)
+            want = {m: dense[p, ctx, m] for m in range(10)
+                    if dense[p, ctx, m] != 0}
+            assert got == pytest.approx(want)
+
+
+def test_sparse_much_smaller_than_dense(tmp_path):
+    """The §8.2 claim at similar sparsity: sparse << dense."""
+    rng = np.random.default_rng(3)
+    n_p, n_c, n_m = 64, 500, 120
+    profs, _ = make_profiles(rng, n_p, n_c, n_m, density=0.01)
+    info = write_cms(str(tmp_path / "m.cms"), profs)
+    dense_bytes = dense_cube_nbytes(n_p, n_c, n_m)
+    assert info["bytes"] * 10 < dense_bytes, (
+        f"sparse {info['bytes']} vs dense {dense_bytes}")
+
+
+def test_missing_context_and_metric(tmp_path):
+    rng = np.random.default_rng(4)
+    profs, _ = make_profiles(rng, 2, 10, 4, density=0.5)
+    path = str(tmp_path / "m.cms")
+    write_cms(path, profs)
+    r = CMSReader(path)
+    assert r.lookup(999, 0, 0) == 0.0
+    assert r.lookup(0, 999, 0) == 0.0
+    assert r.lookup(0, 0, 999) == 0.0
+
+
+@given(st.integers(1, 6), st.integers(1, 25), st.integers(1, 8),
+       st.floats(0.05, 0.9), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_cms_pms_agree_property(tmp_path_factory, n_p, n_c, n_m, density,
+                                seed):
+    """Property: both cubes return identical values for every coordinate."""
+    tmp = tmp_path_factory.mktemp("cube")
+    rng = np.random.default_rng(seed)
+    profs, dense = make_profiles(rng, n_p, n_c, n_m, density)
+    write_cms(str(tmp / "m.cms"), profs, n_workers=2)
+    write_pms(str(tmp / "m.pms"), profs, n_workers=2)
+    cms = CMSReader(str(tmp / "m.cms"))
+    pms = PMSReader(str(tmp / "m.pms"))
+    for p in range(n_p):
+        for c in range(n_c):
+            row = pms.context_values(p, c)
+            for m in range(n_m):
+                assert cms.lookup(c, m, p) == pytest.approx(
+                    row.get(m, 0.0)), (p, c, m)
