@@ -5,10 +5,15 @@ streaming made hpcprof-mpi 3.6x faster at equal core count; 85 GB from
 We aggregate P profiles with (1 rank x 1 thread) vs (R ranks x T threads)
 and report wall-clock speedup plus the *work-scaling* decomposition
 (unify vs stats phases).  On this container the workers are threads (GIL
-caveat discussed in DESIGN.md §8): numpy-heavy stats release the GIL, the
-pure-python unify phase does not, so we report both phases separately —
-the *algorithmic* split (profiles are independent tasks; reduction tree
-depth log_t(R)) is what transfers to MPI ranks.
+caveat discussed in docs/aggregation.md): numpy-heavy phases release the
+GIL, pure-python ones do not, so we report both phases separately — the
+*algorithmic* split (profiles are independent tasks; reduction tree depth
+log_t(R)) is what transfers to MPI ranks.
+
+The perf trajectory across PRs is tracked against ``SEED_BASELINE``
+(measured on the seed implementation, same container, best of 3); the
+acceptance bar for ISSUE 1 is >=2x on the parallel configuration at 16
+profiles with byte-identical outputs (tests/test_aggregate_equiv.py).
 """
 from __future__ import annotations
 
@@ -22,6 +27,15 @@ from repro.core.aggregate import aggregate
 from repro.core.metrics import default_registry
 from repro.core.profmt import write_profile
 from benchmarks.bench_sparse import synth_cct
+
+# Seed implementation (commit 839be6d), 16 profiles, best of 3, this
+# container: dense per-profile matrices + python reverse sweep + one
+# global accumulator lock + per-context CMS fill loop.
+SEED_BASELINE = {
+    "n_profiles": 16,
+    "serial_wall_s": 0.898,
+    "parallel_wall_s": 2.097,
+}
 
 
 def make_inputs(n_profiles: int, tmp: str):
@@ -50,24 +64,28 @@ def _critical_path(task_times, n_workers: int, reduce_cost: float) -> float:
     return max(loads) + depth * reduce_cost
 
 
-def run(n_profiles: int = 48):
+def run(n_profiles: int = 16, repeats: int = 3):
     tmp = tempfile.mkdtemp(prefix="repro_agg_")
     paths = make_inputs(n_profiles, tmp)
     results = {}
     for label, ranks, threads in (("serial", 1, 1), ("parallel", 4, 4)):
-        timing = {}
-        t0 = time.perf_counter()
-        aggregate(paths, os.path.join(tmp, f"db_{label}"), n_ranks=ranks,
-                  n_threads=threads, timing=timing)
-        wall = time.perf_counter() - t0
-        results[label] = {"wall_s": wall, **timing}
+        best = None
+        for rep in range(max(1, repeats)):
+            timing = {}
+            t0 = time.perf_counter()
+            aggregate(paths, os.path.join(tmp, f"db_{label}_{rep}"),
+                      n_ranks=ranks, n_threads=threads, timing=timing)
+            wall = time.perf_counter() - t0
+            if best is None or wall < best["wall_s"]:
+                best = {"wall_s": wall, **timing}
+        results[label] = best
     speedup = results["serial"]["wall_s"] / results["parallel"]["wall_s"]
 
     # --- work / critical-path scaling from measured per-profile times ----
     # (this container has ONE core, so wall-clock 'parallel' cannot beat
     # serial; the transferable number is the schedule of the *measured*
     # independent task times over R x T workers, which is exactly how the
-    # hpcprof-mpi deployment parallelizes — DESIGN.md §8.)
+    # hpcprof-mpi deployment parallelizes — docs/aggregation.md.)
     per_task = []
     for p in paths:
         t0 = time.perf_counter()
@@ -77,23 +95,36 @@ def run(n_profiles: int = 48):
     total_work = sum(per_task)
     reduce_cost = max(per_task) * 0.1   # tree-merge step ~10% of a task
     modeled_16 = _critical_path(per_task, 16, reduce_cost)
-    modeled_48 = _critical_path(per_task, 48, reduce_cost)
-    return {
+    out = {
         "n_profiles": n_profiles,
         "serial_wall_s": results["serial"]["wall_s"],
         "parallel_wall_s": results["parallel"]["wall_s"],
+        "unify_s": results["parallel"]["unify_s"],
+        "stats_s": results["parallel"]["stats_s"],
         "wall_speedup_x_1core": speedup,
         "total_work_s": total_work,
         "modeled_speedup_16workers_x": total_work / modeled_16,
-        "modeled_speedup_48workers_x": total_work / modeled_48,
         "paper_speedup_x": 3.6,
         "note": "1-core container: wall ~1x; modeled = LPT schedule of "
-                "measured task times + reduction tree (see DESIGN.md s8)",
+                "measured task times + reduction tree "
+                "(docs/aggregation.md)",
     }
+    # a 48-worker schedule is only meaningful with >= 48 independent tasks
+    if n_profiles >= 48:
+        out["modeled_speedup_48workers_x"] = \
+            total_work / _critical_path(per_task, 48, reduce_cost)
+    if n_profiles == SEED_BASELINE["n_profiles"]:
+        out["seed_serial_wall_s"] = SEED_BASELINE["serial_wall_s"]
+        out["seed_parallel_wall_s"] = SEED_BASELINE["parallel_wall_s"]
+        out["speedup_vs_seed_serial_x"] = \
+            SEED_BASELINE["serial_wall_s"] / out["serial_wall_s"]
+        out["speedup_vs_seed_parallel_x"] = \
+            SEED_BASELINE["parallel_wall_s"] / out["parallel_wall_s"]
+    return out
 
 
-def main():
-    r = run()
+def main(small: bool = False):
+    r = run(n_profiles=4, repeats=1) if small else run()
     for k, v in r.items():
         print(f"bench_aggregation,{k},{v}")
     return r

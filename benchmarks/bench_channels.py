@@ -3,7 +3,9 @@
 Measures SPSC ring throughput single-threaded and across a producer/
 consumer thread pair, against a locked deque baseline — the design point
 (no locks, no CAS retries on the hot path) should show up as a visibly
-higher items/s.
+higher items/s.  The batched ``try_push_many``/``try_pop_many`` path
+(ISSUE 1) amortizes the per-item Python call overhead and is reported
+separately; ``SEED_BASELINE`` tracks the trajectory across PRs.
 """
 from __future__ import annotations
 
@@ -15,20 +17,27 @@ from repro.core.channels import EMPTY, SpscQueue
 
 N = 200_000
 
+# Seed implementation (commit 839be6d), this container: scalar-only API.
+SEED_BASELINE = {
+    "spsc_single_thread_items_per_s": 975_108.0,
+    "spsc_two_thread_items_per_s": 319_750.0,
+    "locked_two_thread_items_per_s": 17_885.0,
+}
 
-def spsc_pair() -> float:
+
+def spsc_pair(n: int = N) -> float:
     q = SpscQueue(4096)
     done = []
 
     def producer():
         i = 0
-        while i < N:
+        while i < n:
             if q.try_push(i):
                 i += 1
 
     def consumer():
         c = 0
-        while c < N:
+        while c < n:
             if q.try_pop() is not EMPTY:
                 c += 1
         done.append(c)
@@ -37,17 +46,40 @@ def spsc_pair() -> float:
     tp = threading.Thread(target=producer)
     tc = threading.Thread(target=consumer)
     tp.start(); tc.start(); tp.join(); tc.join()
-    return N / (time.perf_counter() - t0)
+    return n / (time.perf_counter() - t0)
 
 
-def locked_pair() -> float:
+def spsc_pair_batched(n: int = N, batch: int = 256) -> float:
+    """Producer/consumer pair using the batch API: one publish per batch."""
+    q = SpscQueue(4096)
+    done = []
+
+    def producer():
+        i = 0
+        while i < n:
+            i += q.try_push_many(list(range(i, min(i + batch, n))))
+
+    def consumer():
+        c = 0
+        while c < n:
+            c += len(q.try_pop_many(batch))
+        done.append(c)
+
+    t0 = time.perf_counter()
+    tp = threading.Thread(target=producer)
+    tc = threading.Thread(target=consumer)
+    tp.start(); tc.start(); tp.join(); tc.join()
+    return n / (time.perf_counter() - t0)
+
+
+def locked_pair(n: int = N) -> float:
     q = collections.deque()
     lock = threading.Lock()
     done = []
 
     def producer():
         i = 0
-        while i < N:
+        while i < n:
             with lock:
                 if len(q) < 4096:
                     q.append(i)
@@ -55,7 +87,7 @@ def locked_pair() -> float:
 
     def consumer():
         c = 0
-        while c < N:
+        while c < n:
             with lock:
                 if q:
                     q.popleft()
@@ -66,29 +98,49 @@ def locked_pair() -> float:
     tp = threading.Thread(target=producer)
     tc = threading.Thread(target=consumer)
     tp.start(); tc.start(); tp.join(); tc.join()
-    return N / (time.perf_counter() - t0)
+    return n / (time.perf_counter() - t0)
 
 
-def single_thread() -> float:
+def single_thread(n: int = N) -> float:
     q = SpscQueue(4096)
     t0 = time.perf_counter()
-    for i in range(N):
+    for i in range(n):
         q.try_push(i)
         q.try_pop()
-    return N / (time.perf_counter() - t0)
+    return n / (time.perf_counter() - t0)
 
 
-def run():
-    return {
-        "spsc_single_thread_items_per_s": single_thread(),
-        "spsc_two_thread_items_per_s": spsc_pair(),
-        "locked_two_thread_items_per_s": locked_pair(),
-        "speedup_vs_locked_x": spsc_pair() / locked_pair(),
+def single_thread_batched(n: int = N, batch: int = 256) -> float:
+    q = SpscQueue(4096)
+    items = list(range(batch))
+    t0 = time.perf_counter()
+    for _ in range(n // batch):
+        q.try_push_many(items)
+        q.try_pop_many(batch)
+    return (n // batch) * batch / (time.perf_counter() - t0)
+
+
+def run(n: int = N):
+    two_thread = spsc_pair(n)
+    locked = locked_pair(n)
+    out = {
+        "spsc_single_thread_items_per_s": single_thread(n),
+        "spsc_single_thread_batched_items_per_s": single_thread_batched(n),
+        "spsc_two_thread_items_per_s": two_thread,
+        "spsc_two_thread_batched_items_per_s": spsc_pair_batched(n),
+        "locked_two_thread_items_per_s": locked,
+        "speedup_vs_locked_x": two_thread / locked,
     }
+    out["batched_speedup_two_thread_x"] = (
+        out["spsc_two_thread_batched_items_per_s"] / two_thread)
+    out["speedup_vs_seed_two_thread_x"] = (
+        out["spsc_two_thread_batched_items_per_s"]
+        / SEED_BASELINE["spsc_two_thread_items_per_s"])
+    return out
 
 
-def main():
-    r = run()
+def main(small: bool = False):
+    r = run(20_000 if small else N)
     for k, v in r.items():
         print(f"bench_channels,{k},{v}")
     return r

@@ -1,11 +1,17 @@
-"""Benchmark driver: one benchmark per paper table/figure (DESIGN.md §7).
+"""Benchmark driver: one benchmark per paper table/figure
+(docs/aggregation.md discusses the aggregation/channel ones).
 
-``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
-prints ``bench,metric,value`` CSV rows for every benchmark.
+``PYTHONPATH=src python -m benchmarks.run [--only NAME] [--small]
+[--json-dir DIR]`` prints ``bench,metric,value`` CSV rows for every
+benchmark, writes ``BENCH_<name>.json`` result files (the cross-PR perf
+trajectory), and exits non-zero if any benchmark raises.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
+import os
 import sys
 import time
 import traceback
@@ -22,10 +28,17 @@ ALL = {
     "roofline": bench_roofline,        # deliverable (g)
 }
 
+# benchmarks whose results are persisted as BENCH_<name>.json
+TRACKED = ("aggregation", "channels")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=sorted(ALL))
+    ap.add_argument("--small", action="store_true",
+                    help="reduced problem sizes (CI smoke)")
+    ap.add_argument("--json-dir", default=".",
+                    help="where BENCH_<name>.json files land")
     args = ap.parse_args(argv)
     failures = 0
     for name, mod in ALL.items():
@@ -34,7 +47,19 @@ def main(argv=None):
         t0 = time.perf_counter()
         print(f"# --- {name} ---", flush=True)
         try:
-            mod.main()
+            kwargs = {}
+            if "small" in inspect.signature(mod.main).parameters:
+                kwargs["small"] = args.small
+            results = mod.main(**kwargs)
+            if name in TRACKED and isinstance(results, dict):
+                os.makedirs(args.json_dir, exist_ok=True)
+                path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+                with open(path, "w") as f:
+                    json.dump({"bench": name, "small": args.small,
+                               "results": results,
+                               "took_s": time.perf_counter() - t0},
+                              f, indent=1)
+                print(f"# wrote {path}", flush=True)
         except Exception:
             failures += 1
             traceback.print_exc()

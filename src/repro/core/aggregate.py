@@ -12,19 +12,24 @@ Pipeline phases, exactly as the paper stages them:
 3. **Calling-context expansion** — flat GPU-op frames are expanded against
    hpcstruct-analogue structure files (lines / loops / inlined scopes).
    (Profiles measured with runtime expansion skip this, see profiler.py.)
-4. **Statistic generation** — per profile, metric values are propagated up
-   the tree (inclusive metrics, vectorized scatter-add over a topological
-   order) and fed into per-(ctx, metric) accumulators that yield
-   sum/min/mean/max/stddev/CoV across profiles; per-profile values stream
-   straight into the PMS/CMS writers.
+4. **Statistic generation** — per profile, metric values are scatter-added
+   into a sparse (ctx, metric) COO set and propagated up the tree with a
+   vectorized level-order sweep (one grouped ``np.add.at`` per tree level,
+   deepest first); workers share *nothing* — per-profile partial
+   accumulators are folded once at the end, in profile order, so the
+   result is deterministic and lock-free (the paper's communication-free
+   workers after exscan).  Per-profile values stream into the PMS/CMS
+   writers.
 5. **Trace + final outputs** — trace files are rewritten in terms of global
-   ctx ids; tree, stats, and sparse cubes land in the database directory.
+   ctx ids (vectorized gather + bulk ``TraceWriter.append_many``); tree,
+   stats, and sparse cubes land in the database directory.
 
 "Ranks" are worker threads here (single-host container): the reduction
 tree, exscan offset computation, and nnz-balanced work splitting are the
-same algorithms hpcprof-mpi runs over MPI; DESIGN.md §8 discusses the
-honesty of this mapping and the benchmark reports both wall-clock and
-work/critical-path scaling.
+same algorithms hpcprof-mpi runs over MPI; docs/aggregation.md discusses
+the honesty of this mapping, the GIL caveats, and the bit-exactness
+contract (the vectorized path reproduces the reference implementation's
+floating-point addition order, so databases are byte-identical).
 """
 from __future__ import annotations
 
@@ -32,38 +37,111 @@ import dataclasses
 import json
 import os
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.cct import Frame, GPU_OP, PLACEHOLDER
-from repro.core.profmt import ProfileData, read_profile
+from repro.core.profmt import (FRAME_KIND_IDX, ProfileData, read_profile)
 from repro.core.sparse import ProfileValues, write_cms, write_pms
 from repro.core.structure import HloModule
 from repro.core.trace import TraceWriter, read_trace
 
 STATS = ("sum", "min", "mean", "max", "std", "cov")
 
+_GPU_OP_KIND = FRAME_KIND_IDX[GPU_OP]
+
 
 # --------------------------------------------------------------------------
 # Global tree under construction
 # --------------------------------------------------------------------------
 class GlobalTree:
+    """Global CCT built by merging per-profile trees.
+
+    Frames are interned into an integer id table (strings interned once,
+    then a frame is a (kind, name id, module id, line) key), and children
+    are resolved through a dict keyed by the packed integer
+    ``(parent << 32) | frame_id`` — per-node tuple/Frame hashing is off the
+    hot path entirely; ``merge_paths`` computes each profile's frame ids
+    with array-level gathers over the profile's string table.
+    """
+
     def __init__(self):
         self.frames: List[Frame] = [Frame("root", "<program root>")]
         self.parents: List[int] = [-1]
-        self._index: Dict[Tuple[int, Frame], int] = {}
+        self._children: Dict[int, int] = {}      # (parent<<32)|fid -> gid
+        self._strings: Dict[str, int] = {}       # string intern table
+        self._key_fids: Dict[Tuple[int, int, int, int], int] = {}
+        self._frame_of_fid: List[Frame] = []     # fid -> canonical Frame
+        self._frame_cache: Dict[Frame, int] = {}  # fast path for child()
 
-    def child(self, parent: int, frame: Frame) -> int:
-        key = (parent, frame)
-        gid = self._index.get(key)
+    # -- interning ----------------------------------------------------------
+    def _intern_string(self, s: str) -> int:
+        i = self._strings.get(s)
+        if i is None:
+            i = len(self._strings)
+            self._strings[s] = i
+        return i
+
+    def _fid_for_key(self, key: Tuple[int, int, int, int],
+                     frame: Frame) -> int:
+        fid = self._key_fids.get(key)
+        if fid is None:
+            fid = len(self._frame_of_fid)
+            self._key_fids[key] = fid
+            self._frame_of_fid.append(frame)
+        return fid
+
+    def intern_frame(self, frame: Frame) -> int:
+        fid = self._frame_cache.get(frame)
+        if fid is None:
+            kind = FRAME_KIND_IDX.get(frame.kind)
+            if kind is None:   # kinds outside the profile format's table
+                kind = -2 - self._intern_string(frame.kind)
+            key = (kind, self._intern_string(frame.name),
+                   self._intern_string(frame.module), int(frame.line))
+            fid = self._fid_for_key(key, frame)
+            self._frame_cache[frame] = fid
+        return fid
+
+    # -- tree construction ---------------------------------------------------
+    def _child_fid(self, parent: int, fid: int) -> int:
+        key = (parent << 32) | fid
+        gid = self._children.get(key)
         if gid is None:
             gid = len(self.frames)
-            self.frames.append(frame)
+            self.frames.append(self._frame_of_fid[fid])
             self.parents.append(parent)
-            self._index[key] = gid
+            self._children[key] = gid
         return gid
+
+    def child(self, parent: int, frame: Frame) -> int:
+        return self._child_fid(parent, self.intern_frame(frame))
+
+    def _profile_fids(self, prof: ProfileData) -> np.ndarray:
+        """Per-node global frame ids, resolved with one dict lookup per
+        *unique* frame (array-level dedup) instead of one per node."""
+        if prof.frame_kinds is None:
+            return np.fromiter((self.intern_frame(f) for f in prof.frames),
+                               np.int64, len(prof.frames))
+        gsid = np.fromiter((self._intern_string(s) for s in prof.strings),
+                           np.int64, len(prof.strings)) \
+            if prof.strings else np.zeros(0, np.int64)
+        rows = np.stack([prof.frame_kinds,
+                         gsid[prof.frame_name_sids],
+                         gsid[prof.frame_mod_sids],
+                         prof.frame_lines], axis=1)
+        uniq, first, inv = np.unique(rows, axis=0, return_index=True,
+                                     return_inverse=True)
+        fids_u = np.empty(len(uniq), np.int64)
+        for j in range(len(uniq)):
+            r = uniq[j]
+            fids_u[j] = self._fid_for_key(
+                (int(r[0]), int(r[1]), int(r[2]), int(r[3])),
+                prof.frames[int(first[j])])
+        return fids_u[inv.ravel()]
 
     def merge_paths(self, prof: ProfileData,
                     expand=None) -> np.ndarray:
@@ -71,33 +149,66 @@ class GlobalTree:
         n = len(prof.node_ids)
         local_to_global = np.zeros(int(prof.node_ids.max()) + 1 if n else 1,
                                    np.int64)
+        fids = self._profile_fids(prof).tolist()
+        node_ids = prof.node_ids.tolist()
+        parents = prof.parents.tolist()
+        is_gpu = (prof.frame_kinds == _GPU_OP_KIND).tolist() \
+            if (expand is not None and prof.frame_kinds is not None) else None
+        l2g = local_to_global.tolist()
+        children = self._children
+        frames_out, parents_out = self.frames, self.parents
+        frame_of_fid = self._frame_of_fid
         # profiles store nodes in creation order: parents precede children
         for i in range(n):
-            nid = int(prof.node_ids[i])
-            par = int(prof.parents[i])
-            frame = prof.frames[i]
+            par = parents[i]
             if par < 0:
-                local_to_global[nid] = 0
+                l2g[node_ids[i]] = 0
                 continue
-            gpar = int(local_to_global[par])
-            if expand is not None and frame.kind == GPU_OP:
-                for f in expand(frame, prof):
+            gpar = l2g[par]
+            if expand is not None and (
+                    is_gpu[i] if is_gpu is not None
+                    else prof.frames[i].kind == GPU_OP):
+                for f in expand(prof.frames[i], prof):
                     gpar = self.child(gpar, f)
-                local_to_global[nid] = gpar
-            else:
-                local_to_global[nid] = self.child(gpar, frame)
+                l2g[node_ids[i]] = gpar
+                continue
+            key = (gpar << 32) | fids[i]
+            gid = children.get(key)
+            if gid is None:
+                gid = len(frames_out)
+                frames_out.append(frame_of_fid[fids[i]])
+                parents_out.append(gpar)
+                children[key] = gid
+            l2g[node_ids[i]] = gid
+        local_to_global[:] = l2g
         return local_to_global
 
     def merge_tree(self, other: "GlobalTree") -> np.ndarray:
         """Merge another tree into this one (reduction-tree step)."""
         mapping = np.zeros(len(other.frames), np.int64)
+        m = mapping.tolist()
+        other_parents = other.parents
         for gid in range(1, len(other.frames)):
-            mapping[gid] = self.child(int(mapping[other.parents[gid]]),
-                                      other.frames[gid])
+            m[gid] = self.child(m[other_parents[gid]], other.frames[gid])
+        mapping[:] = m
         return mapping
 
     def topo_order(self) -> np.ndarray:
         return np.arange(len(self.frames))  # creation order is topological
+
+    def depths(self) -> np.ndarray:
+        """Per-node depth (root = 0), computed with vectorized parent
+        jumps: O(max_depth) passes over the id array."""
+        parents = np.asarray(self.parents, np.int64)
+        depth = np.zeros(len(parents), np.int64)
+        cur = parents.copy()
+        while True:
+            mask = cur >= 0
+            if not mask.any():
+                break
+            depth[mask] += 1
+            cur[mask] = parents[cur[mask]]
+        return depth
 
 
 # --------------------------------------------------------------------------
@@ -137,6 +248,11 @@ class Database:
     profile_ids: Dict[int, dict]            # profile id -> identity
     stats: Dict[str, np.ndarray]            # stat -> (n_ctx, n_metrics)
     inclusive: bool = True
+    # CSR children index, built lazily on first children_of() call
+    _child_order: Optional[np.ndarray] = dataclasses.field(
+        default=None, init=False, repr=False)
+    _child_parents: Optional[np.ndarray] = dataclasses.field(
+        default=None, init=False, repr=False)
 
     @classmethod
     def load(cls, out_dir: str) -> "Database":
@@ -153,13 +269,104 @@ class Database:
         return self.metrics.index(name)
 
     def children_of(self, gid: int) -> List[int]:
-        return [i for i, p in enumerate(self.parents) if p == gid]
+        """Children of a context, via a precomputed CSR index (a stable
+        argsort of the parent array) instead of an O(n) scan per call."""
+        if self._child_order is None:
+            parents = np.asarray(self.parents, np.int64)
+            order = np.argsort(parents, kind="stable")
+            # publish _child_parents first: a concurrent caller passing the
+            # None-check above must find both arrays populated
+            self._child_parents = parents[order]
+            self._child_order = order
+        lo, hi = np.searchsorted(self._child_parents, [gid, gid + 1])
+        return [int(i) for i in self._child_order[lo:hi]]
 
     def cms_path(self) -> str:
         return os.path.join(self.out_dir, "metrics.cms")
 
     def pms_path(self) -> str:
         return os.path.join(self.out_dir, "metrics.pms")
+
+
+# --------------------------------------------------------------------------
+# Phase 4 kernels: sparse per-profile stats + level-order propagation
+# --------------------------------------------------------------------------
+def _group_sum_ordered(keys: np.ndarray, vals: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Sum ``vals`` grouped by ``keys``, accumulating within each group in
+    the array order of equal keys (stable sort + one unbuffered
+    ``np.add.at``) — the FP addition order therefore matches a sequential
+    scatter loop over the same data."""
+    order = np.argsort(keys, kind="stable")
+    ks, vs = keys[order], vals[order]
+    uk, counts = np.unique(ks, return_counts=True)
+    gidx = np.repeat(np.arange(len(uk)), counts)
+    out = np.zeros(len(uk))
+    np.add.at(out, gidx, vs)
+    return uk, out
+
+
+def _profile_inclusive_sparse(prof: ProfileData, gmap: np.ndarray,
+                              parents: np.ndarray, depth: np.ndarray,
+                              n_metrics: int
+                              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One profile's inclusive (ctx, metric, value) triplets against the
+    global tree, fully sparse.
+
+    Exclusive values are scatter-added into COO keyed by
+    ``ctx * n_metrics + metric``; inclusive propagation is a level-order
+    sweep from the deepest tree level to the root — per level one grouped
+    ``np.add.at`` folds the (already-inclusive) child entries into their
+    parents.  Children are folded in decreasing global-id order after the
+    parent's own exclusive value, which reproduces, bit for bit, the FP
+    addition order of the classic dense reverse-id sweep (see
+    docs/aggregation.md and tests/test_aggregate_equiv.py).
+    """
+    n_values = len(prof.values)
+    if n_values == 0 or n_metrics == 0:
+        z = np.zeros(0, np.int64)
+        return z, z, np.zeros(0, np.float64)
+    ranges = prof.ranges
+    starts, counts = ranges[:, 1], ranges[:, 2]
+    if (len(ranges) and starts[0] == 0
+            and starts[-1] + counts[-1] == n_values
+            and np.array_equal(starts[1:], starts[:-1] + counts[:-1])):
+        node_of_value = np.repeat(gmap[ranges[:, 0]], counts)
+    else:   # non-contiguous layout: rare, keep the per-range fill
+        node_of_value = np.zeros(n_values, np.int64)
+        for nid, start, count in ranges:
+            node_of_value[start:start + count] = gmap[int(nid)]
+    keys = node_of_value * n_metrics + prof.value_mids.astype(np.int64)
+    uk, val = _group_sum_ordered(keys, prof.values)
+    ctx = uk // n_metrics
+    met = uk % n_metrics
+
+    dd = depth[ctx]
+    maxd = int(dd.max()) if len(dd) else 0
+    for lvl in range(maxd, 0, -1):
+        sel = dd == lvl
+        if not sel.any():
+            continue
+        s_ctx, s_met, s_val = ctx[sel], met[sel], val[sel]
+        # children fold into a parent in decreasing id order (stable), the
+        # order the dense reverse-id sweep adds them in
+        o = np.argsort(-s_ctx, kind="stable")
+        up_keys = parents[s_ctx[o]] * n_metrics + s_met[o]
+        plv = dd == lvl - 1
+        # parent's own (exclusive) entry first, then its children
+        cat_keys = np.concatenate([ctx[plv] * n_metrics + met[plv], up_keys])
+        cat_vals = np.concatenate([val[plv], s_val[o]])
+        uk2, nv = _group_sum_ordered(cat_keys, cat_vals)
+        keep = ~plv
+        ctx = np.concatenate([ctx[keep], uk2 // n_metrics])
+        met = np.concatenate([met[keep], uk2 % n_metrics])
+        val = np.concatenate([val[keep], nv])
+        dd = depth[ctx]
+
+    nz = val != 0.0          # match np.nonzero() on the dense matrix
+    ctx, met, val = ctx[nz], met[nz], val[nz]
+    o = np.argsort(ctx * n_metrics + met, kind="stable")  # row-major order
+    return ctx[o], met[o], val[o]
 
 
 # --------------------------------------------------------------------------
@@ -197,11 +404,9 @@ def aggregate(profile_paths: Sequence[str], out_dir: str, *,
 
     # reduction tree (arity = n_threads) to the root rank
     trees = [r[0] for r in rank_results]
-    mappings: List[np.ndarray] = [None] * len(trees)  # rank tree -> global
+    mappings: List[Optional[np.ndarray]] = [None] * len(trees)
     root = trees[0]
-    idmaps = [np.arange(len(root.frames))]
     # k-ary reduction: fold each tree into root, tracked per rank
-    mappings[0] = None
     for i in range(1, len(trees)):
         mappings[i] = root.merge_tree(trees[i])
     t_unify = time.monotonic() - t0
@@ -215,76 +420,66 @@ def aggregate(profile_paths: Sequence[str], out_dir: str, *,
             gmap = mapping if conv is None else conv[mapping]
             all_profiles.append((path, prof, gmap))
 
-    # phase 4: statistic generation (parallel over profiles)
+    # phase 4: statistic generation (parallel over profiles).  Workers are
+    # communication-free: each returns its profile's sparse triplets; the
+    # partial accumulators are folded below, once, in profile order — no
+    # shared state, no lock, and a deterministic result.
     metrics = all_profiles[0][1].metrics if all_profiles else []
     n_metrics = len(metrics)
     parents = np.asarray(root.parents)
-
-    acc_lock = __import__("threading").Lock()
-    acc = {
-        "sum": np.zeros((n_ctx, n_metrics)),
-        "min": np.full((n_ctx, n_metrics), np.inf),
-        "max": np.full((n_ctx, n_metrics), -np.inf),
-        "sumsq": np.zeros((n_ctx, n_metrics)),
-        "count": np.zeros((n_ctx, n_metrics)),
-    }
-    pvals: List[ProfileValues] = []
-    identities: Dict[int, dict] = {}
+    depth = root.depths()
 
     def gen_stats(args):
         pidx, (path, prof, gmap) = args
-        dense = np.zeros((n_ctx, n_metrics))
-        node_of_value = np.zeros(len(prof.values), np.int64)
-        for nid, start, count in prof.ranges:
-            node_of_value[start:start + count] = gmap[int(nid)]
-        np.add.at(dense, (node_of_value, prof.value_mids.astype(np.int64)),
-                  prof.values)
-        # inclusive propagation: children created after parents, so a
-        # reverse sweep adds each row into its parent exactly once.
-        for gid in range(n_ctx - 1, 0, -1):
-            p = parents[gid]
-            if p >= 0:
-                dense[p] += dense[gid]
-        nz_ctx, nz_met = np.nonzero(dense)
-        vals = dense[nz_ctx, nz_met]
-        with acc_lock:
-            acc["sum"][nz_ctx, nz_met] += vals
-            np.minimum.at(acc["min"], (nz_ctx, nz_met), vals)
-            np.maximum.at(acc["max"], (nz_ctx, nz_met), vals)
-            acc["sumsq"][nz_ctx, nz_met] += vals ** 2
-            acc["count"][nz_ctx, nz_met] += 1
-            pvals.append(ProfileValues(pidx, nz_ctx.astype(np.uint32),
-                                       nz_met.astype(np.uint32), vals))
-            identities[pidx] = prof.identity
-        return None
+        ctx, met, val = _profile_inclusive_sparse(prof, gmap, parents,
+                                                  depth, n_metrics)
+        return (pidx, prof.identity,
+                ProfileValues(pidx, ctx.astype(np.uint32),
+                              met.astype(np.uint32), val))
 
     with ThreadPoolExecutor(max(1, n_ranks * n_threads)) as ex:
-        list(ex.map(gen_stats, enumerate(all_profiles)))
+        results = list(ex.map(gen_stats, enumerate(all_profiles)))
+    identities: Dict[int, dict] = {pidx: ident for pidx, ident, _ in results}
+    pvals: List[ProfileValues] = [pv for _, _, pv in results]
+
+    # merge of per-profile partials (ascending profile id)
+    acc_sum = np.zeros((n_ctx, n_metrics))
+    acc_min = np.full((n_ctx, n_metrics), np.inf)
+    acc_max = np.full((n_ctx, n_metrics), -np.inf)
+    acc_sumsq = np.zeros((n_ctx, n_metrics))
+    acc_count = np.zeros((n_ctx, n_metrics))
+    for pv in pvals:
+        idx = (pv.ctx.astype(np.int64), pv.metric.astype(np.int64))
+        vals = pv.values
+        acc_sum[idx] += vals          # (ctx, metric) pairs unique per profile
+        np.minimum.at(acc_min, idx, vals)
+        np.maximum.at(acc_max, idx, vals)
+        acc_sumsq[idx] += vals ** 2
+        acc_count[idx] += 1
     t_stats = time.monotonic() - t0 - t_unify
 
-    count = np.maximum(acc["count"], 1)
-    mean = acc["sum"] / count
-    var = np.maximum(acc["sumsq"] / count - mean ** 2, 0.0)
+    count = np.maximum(acc_count, 1)
+    mean = acc_sum / count
+    var = np.maximum(acc_sumsq / count - mean ** 2, 0.0)
     std = np.sqrt(var)
     stats = {
-        "sum": acc["sum"],
-        "min": np.where(np.isfinite(acc["min"]), acc["min"], 0.0),
+        "sum": acc_sum,
+        "min": np.where(np.isfinite(acc_min), acc_min, 0.0),
         "mean": mean,
-        "max": np.where(np.isfinite(acc["max"]), acc["max"], 0.0),
+        "max": np.where(np.isfinite(acc_max), acc_max, 0.0),
         "std": std,
         "cov": np.where(mean != 0, std / np.maximum(np.abs(mean), 1e-30),
                         0.0),
-        "count": acc["count"],
+        "count": acc_count,
     }
 
-    # sparse cube outputs
-    pvals.sort(key=lambda p: p.profile_id)
+    # sparse cube outputs (pvals already ascend by profile id)
     cms_info = write_cms(os.path.join(out_dir, "metrics.cms"), pvals,
                          n_workers=n_ranks * n_threads)
     pms_info = write_pms(os.path.join(out_dir, "metrics.pms"), pvals,
                          n_workers=n_ranks * n_threads)
 
-    # phase 5: trace conversion
+    # phase 5: trace conversion (vectorized gather through gmap)
     path_to_gmap = {path: gmap for path, prof, gmap in all_profiles}
     for tpath in trace_paths:
         td = read_trace(tpath)
@@ -292,10 +487,18 @@ def aggregate(profile_paths: Sequence[str], out_dir: str, *,
         gmap = path_to_gmap.get(ppath)
         out = TraceWriter(os.path.join(out_dir, os.path.basename(tpath)),
                           td.identity)
-        for s, e, c in zip(td.starts, td.ends, td.ctx):
-            gid = int(gmap[int(c)]) if gmap is not None and \
-                int(c) < len(gmap) else int(c)
-            out.append(int(s), int(e), gid)
+        if gmap is None:
+            gids = td.ctx
+        else:
+            valid = (td.ctx >= 0) & (td.ctx < len(gmap))
+            if not valid.all():
+                warnings.warn(
+                    f"{tpath}: {int((~valid).sum())} trace event(s) "
+                    "reference ctx ids outside the profile's id map; "
+                    "attributing them to the root context", RuntimeWarning)
+            gids = np.where(valid,
+                            gmap[np.clip(td.ctx, 0, len(gmap) - 1)], 0)
+        out.append_many(td.starts, td.ends, gids)
         out.close()
 
     meta = {

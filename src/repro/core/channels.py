@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import itertools
 import threading
-from typing import Any, Iterator, List, Optional
+from typing import Any, Iterator, List, Optional, Sequence
 
 _EMPTY = object()
 
@@ -63,6 +63,52 @@ class SpscQueue:
         self._head = head + 1                      # ... then consume
         self.pops += 1
         return item
+
+    def try_push_many(self, items: Sequence[Any]) -> int:
+        """Producer-only batch push.  Returns how many items were accepted
+        (0 when full; may be fewer than ``len(items)``).
+
+        All accepted slots are written first and ``_tail`` is published
+        once for the whole batch, so the wait-free SPSC invariant is
+        unchanged while the per-item call overhead is paid once per batch.
+        The consumer may concurrently advance ``_head``; the availability
+        snapshot taken here is then a lower bound, which is safe.
+        """
+        if not items:
+            return 0
+        tail = self._tail
+        avail = self._capacity - (tail - self._head)
+        n = len(items) if avail >= len(items) else max(avail, 0)
+        if n <= 0:
+            self.push_failures += 1
+            return 0
+        slots, cap = self._slots, self._capacity
+        for k in range(n):
+            slots[(tail + k) % cap] = items[k]   # write slots ...
+        self._tail = tail + n                    # ... then publish once
+        self.pushes += n
+        if n < len(items):
+            self.push_failures += 1
+        return n
+
+    def try_pop_many(self, limit: Optional[int] = None) -> List[Any]:
+        """Consumer-only batch pop.  Returns up to ``limit`` ready items
+        (empty list when none).  ``_head`` is published once per batch."""
+        head = self._head
+        n = self._tail - head
+        if limit is not None and n > limit:
+            n = limit
+        if n <= 0:
+            return []
+        slots, cap = self._slots, self._capacity
+        out = [None] * n
+        for k in range(n):
+            i = (head + k) % cap
+            out[k] = slots[i]
+            slots[i] = None                      # release references ...
+        self._head = head + n                    # ... then consume once
+        self.pops += n
+        return out
 
     def drain(self, limit: Optional[int] = None) -> Iterator[Any]:
         """Consumer-only: pop until empty (or ``limit`` items)."""

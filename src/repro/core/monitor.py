@@ -80,6 +80,10 @@ class MonitorThread:
                                         name="repro-gpu-monitor",
                                         daemon=True)
         self._pending_ops: Dict[int, tuple] = {}   # corr_id -> (op, C_A)
+        # True while a popped batch is being routed: quiesce() must not
+        # declare the system drained based on empty queues alone, because
+        # up to 1024 records can be in flight inside _drain_once
+        self._routing = False
         # per-stream trace channels; monitor is the single producer
         self._trace_channels: Dict[int, SpscQueue] = {}
         self._trace_threads: List[TracingThread] = []
@@ -104,12 +108,29 @@ class MonitorThread:
 
     def quiesce(self, timeout: float = 5.0):
         """Wait until all channels drain (used by flush)."""
+        def queues_empty():
+            if not all(ch.operation.empty for _, ch in
+                       self._channels.items()):
+                return False
+            return not self._tracing or all(
+                q.empty for q in self._trace_channels.values())
+
+        def flags_clear():
+            return not self._routing and \
+                not any(t.busy for t in self._trace_threads)
+
         deadline = time.monotonic() + timeout
         while time.monotonic() < deadline:
-            if all(ch.operation.empty for _, ch in self._channels.items()):
-                if not self._tracing or all(
-                        q.empty for q in self._trace_channels.values()):
-                    return True
+            # queues / flags / queues / flags.  The flags are raised before
+            # each batch pop, so flags reading False rules out a batch
+            # popped from queues a preceding scan saw empty; the second
+            # queue scan catches records a routing round moved *into* a
+            # trace queue between the first scan and the flag read, and the
+            # final flag read catches a tracer that popped that handoff
+            # right before the second scan and is still appending it.
+            if queues_empty() and flags_clear() \
+                    and queues_empty() and flags_clear():
+                return True
             time.sleep(self._poll_s)
         return False
 
@@ -125,10 +146,23 @@ class MonitorThread:
                 break
 
     def _drain_once(self) -> bool:
+        """One polling round.  Records are popped and re-routed in batches
+        (``try_pop_many`` / ``try_push_many``) so the per-item Python call
+        overhead is paid once per batch; per-channel FIFO order is
+        preserved because each batch keeps arrival order."""
         busy = False
         for tid, ch in self._channels.items():
-            for rec in ch.operation.drain(limit=1024):
-                busy = True
+            # flag raised *before* the pop: an observer sees either the
+            # flag or a still-non-empty queue, never a silent in-flight gap
+            self._routing = True
+            recs = ch.operation.try_pop_many(1024)
+            if not recs:
+                self._routing = False
+                continue
+            busy = True
+            routed: Dict[Any, List[tuple]] = {}   # owner channel -> batch
+            traced: Dict[int, List[tuple]] = {}   # stream -> batch
+            for rec in recs:
                 tag = rec[0]
                 if tag == OP:
                     _, op = rec
@@ -141,23 +175,34 @@ class MonitorThread:
                     if entry is None:
                         continue
                     op, owner_ch = entry
-                    # route (A, P) back to the owning application thread
-                    while not owner_ch.activity.try_push((act, op.placeholder)):
-                        time.sleep(self._poll_s)  # backpressure, app drains
-                    self.stats["routed"] += 1
+                    routed.setdefault(owner_ch, []).append(
+                        (act, op.placeholder))
                     if self._tracing:
-                        self._route_trace(act, op)
+                        traced.setdefault(act.stream, []).append(
+                            (act, op.placeholder))
+            # route (A, P) batches back to the owning application threads
+            for owner_ch, batch in routed.items():
+                self._push_all(owner_ch.activity, batch)
+                self.stats["routed"] += len(batch)
+            for stream, batch in traced.items():
+                self._push_all(self._trace_queue(stream), batch)
+            self._routing = False
         return busy
 
-    def _route_trace(self, act: GpuActivity, op: GpuOperation):
-        q = self._trace_channels.get(act.stream)
+    def _push_all(self, q: SpscQueue, batch: List[tuple]):
+        pos = q.try_push_many(batch)
+        while pos < len(batch):
+            time.sleep(self._poll_s)  # backpressure, consumer drains
+            pos += q.try_push_many(batch[pos:])
+
+    def _trace_queue(self, stream: int) -> SpscQueue:
+        q = self._trace_channels.get(stream)
         if q is None:
             q = SpscQueue(1 << 16)
-            self._trace_channels[act.stream] = q
-            tt = self._trace_threads[act.stream % len(self._trace_threads)]
-            tt.add_channel(act.stream, q, self.trace_sink)
-        while not q.try_push((act, op.placeholder)):
-            time.sleep(self._poll_s)
+            self._trace_channels[stream] = q
+            tt = self._trace_threads[stream % len(self._trace_threads)]
+            tt.add_channel(stream, q, self.trace_sink)
+        return q
 
 
 class TracingThread(threading.Thread):
@@ -174,6 +219,8 @@ class TracingThread(threading.Thread):
         self._channels: Dict[int, tuple] = {}
         self._pending: List[tuple] = []
         self.records: Dict[int, list] = {}
+        # raised before each batch pop (see MonitorThread.quiesce)
+        self.busy = False
 
     def add_channel(self, stream: int, q: SpscQueue, sink):
         # single assignment from the monitor thread; dict insert is atomic
@@ -187,15 +234,21 @@ class TracingThread(threading.Thread):
         self._poll()
 
     def _poll(self) -> bool:
-        busy = False
+        progressed = False
         for stream, (q, sink) in list(self._channels.items()):
-            for act, placeholder in q.drain(limit=1024):
-                busy = True
-                self.records.setdefault(stream, []).append(
-                    (act.t_start, act.t_end, placeholder.node_id))
+            self.busy = True    # raised before the pop, cleared after append
+            batch = q.try_pop_many(1024)
+            if not batch:
+                self.busy = False
+                continue
+            progressed = True
+            recs = self.records.setdefault(stream, [])
+            for act, placeholder in batch:
+                recs.append((act.t_start, act.t_end, placeholder.node_id))
                 if sink is not None:
                     sink(stream, act, placeholder)
-        return busy
+            self.busy = False
+        return progressed
 
     def stop(self):
         self._stop_evt.set()

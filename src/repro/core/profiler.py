@@ -180,8 +180,12 @@ class Profiler:
 
     # ------------------------------------------------------------------ #
     def _drain_activities(self, st: _ThreadState, ch):
-        for act, placeholder in ch.activity.drain():
-            self._attribute(st, act, placeholder)
+        while True:
+            batch = ch.activity.try_pop_many(256)
+            if not batch:
+                return
+            for act, placeholder in batch:
+                self._attribute(st, act, placeholder)
 
     def _attribute(self, st: _ThreadState, act: GpuActivity,
                    placeholder: CCTNode):
@@ -257,8 +261,8 @@ class Profiler:
             write_profile(path, st.cct, self.registry, ident, mods)
             out[f"cpu_{i}"] = path
             tw = TraceWriter(path.replace(".rpro", ".rtrc"), ident)
-            for rec in st.trace:
-                tw.append(*rec)
+            recs = np.asarray(st.trace, np.uint64).reshape(-1, 3)
+            tw.append_many(recs[:, 0], recs[:, 1], recs[:, 2])
             tw.close()
             out[f"cpu_trace_{i}"] = tw.path
         with self._stream_lock:
@@ -278,8 +282,8 @@ class Profiler:
                 tw = TraceWriter(
                     os.path.join(self.out_dir,
                                  f"trace_r{self.rank}_s{sid}.rtrc"), ident)
-                for rec in recs:
-                    tw.append(*rec)
+                arr = np.asarray(recs, np.uint64).reshape(-1, 3)
+                tw.append_many(arr[:, 0], arr[:, 1], arr[:, 2])
                 tw.close()
                 out[f"gpu_trace_{sid}"] = tw.path
         return out

@@ -32,6 +32,11 @@ _FRAME_KINDS = ("root", "host", "placeholder", "gpu_op", "gpu_func",
                 "gpu_loop")
 _KIND_IDX = {k: i for i, k in enumerate(_FRAME_KINDS)}
 
+# public aliases: the aggregator's batched frame interning keys frames by
+# (kind idx, name, module, line) and needs the same kind numbering
+FRAME_KINDS = _FRAME_KINDS
+FRAME_KIND_IDX = _KIND_IDX
+
 
 class _StringTable:
     def __init__(self):
@@ -126,6 +131,14 @@ class ProfileData:
     value_mids: np.ndarray      # (V,) uint32 global metric ids
     values: np.ndarray          # (V,) float64
     ranges: np.ndarray          # (R, 3) node_id, start, count
+    # raw frame keys, parallel to ``frames`` — lets the aggregator intern
+    # frames with array-level gathers over the profile string table instead
+    # of hashing Frame objects per node (None on hand-built ProfileData)
+    frame_kinds: Optional[np.ndarray] = None    # (N,) kind index
+    frame_name_sids: Optional[np.ndarray] = None  # (N,) local string id
+    frame_mod_sids: Optional[np.ndarray] = None   # (N,) local string id
+    frame_lines: Optional[np.ndarray] = None    # (N,)
+    strings: Optional[List[str]] = None         # local string table
 
     def node_values(self, node_id: int) -> Dict[int, float]:
         row = self.ranges[self.ranges[:, 0] == node_id]
@@ -168,13 +181,13 @@ def read_profile(path: str) -> ProfileData:
         (slen,) = struct.unpack("<I", f.read(4))
         strings = json.loads(f.read(slen))
 
-    frames = []
-    for row in cct_rows:
-        packed = int(row[3])
-        frames.append(Frame(_FRAME_KINDS[int(row[2])],
-                            strings[packed >> 32],
-                            strings[packed & 0xFFFFFFFF],
-                            int(row[4])))
+    packed = cct_rows[:, 3]
+    name_sids = (packed >> 32).astype(np.int64)
+    mod_sids = (packed & 0xFFFFFFFF).astype(np.int64)
+    frames = [Frame(_FRAME_KINDS[k], strings[n], strings[m], ln)
+              for k, n, m, ln in zip(cct_rows[:, 2].tolist(),
+                                     name_sids.tolist(), mod_sids.tolist(),
+                                     cct_rows[:, 4].tolist())]
     return ProfileData(
         identity=header["identity"],
         metrics=header["metrics"],
@@ -185,6 +198,11 @@ def read_profile(path: str) -> ProfileData:
         value_mids=mids.copy(),
         values=vals.copy(),
         ranges=ranges.copy(),
+        frame_kinds=cct_rows[:, 2].copy(),
+        frame_name_sids=name_sids,
+        frame_mod_sids=mod_sids,
+        frame_lines=cct_rows[:, 4].copy(),
+        strings=strings,
     )
 
 

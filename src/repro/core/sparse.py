@@ -15,10 +15,11 @@ offsets vector, metric locate O(log m) by binary search in midxs, a single
 (ctx, metric, profile) value O(log m + log p).
 
 Construction mirrors hpcprof-mpi: workers are assigned profiles (PMS) or
-contexts *balanced by non-zero count* (CMS); an exscan over plane sizes
-yields every worker's write offset; workers then fill a preallocated
-memmap concurrently without further communication, in bounded-memory
-rounds (out-of-core).
+contiguous context ranges balanced by plane bytes (~non-zero count, the
+paper's CMS load-balance criterion); an exscan over plane sizes yields
+every worker's write offset; workers then fill a preallocated memmap
+concurrently without further communication, in bounded-memory rounds
+(out-of-core).
 """
 from __future__ import annotations
 
@@ -76,10 +77,12 @@ def write_cms(path: str, profiles: List[ProfileValues], *,
     bounds = np.append(starts, len(ctx))
 
     # per-context plane sizes: midx entries + sentinel, pids, vals
-    # (vectorized: unique (ctx, metric) pairs -> metric count per context)
+    # (vectorized: unique (ctx, metric) pairs -> metric count per context;
+    # the pair table is reused below to build the midxs streams)
     pair = (ctx.astype(np.int64) << 32) | met.astype(np.int64)
-    upair_ctx = (np.unique(pair) >> 32).astype(np.int64)
-    _, m_counts = np.unique(upair_ctx, return_counts=True)
+    upair, up_first = np.unique(pair, return_index=True)
+    upair_plane = np.searchsorted(uctx, (upair >> 32))
+    m_counts = np.bincount(upair_plane, minlength=len(uctx)).astype(np.int64)
     n_midxs = m_counts + 1  # + sentinel
     nnz = bounds[1:] - bounds[:-1]
     plane_bytes = n_midxs * 12 + nnz * (4 + 8)
@@ -112,46 +115,90 @@ def write_cms(path: str, profiles: List[ProfileValues], *,
     idx[:, 2] = offsets + data_start
     mm[p0 + 4:p0 + 4 + index_bytes] = np.frombuffer(idx.tobytes(), np.uint8)
 
-    # --- parallel plane fill: contexts balanced by nnz, bounded rounds ------
-    work = list(range(len(uctx)))
-    # greedy balance by non-zeros (paper: CMS load-balances on nnz)
-    work.sort(key=lambda i: -int(nnz[i]))
-    buckets: List[List[int]] = [[] for _ in range(n_workers)]
-    loads = [0] * n_workers
-    for i in work:
-        b = loads.index(min(loads))
-        buckets[b].append(i)
-        loads[b] += int(nnz[i])
+    # --- plane fill ---------------------------------------------------------
+    # Workers own disjoint, byte-balanced contiguous plane ranges, filled
+    # in bounded rounds (out-of-core): each round assembles a run of
+    # planes into one segment with array-level scatters (no per-context
+    # Python loop, no per-context np.unique) and writes it to the memmap
+    # with a single GIL-releasing copy, then flushes.  The scatter's index
+    # arrays cost ~_SEG_TEMP_FACTOR transient bytes per output byte, so
+    # rounds are sized at max_round_bytes / _SEG_TEMP_FACTOR — per-worker
+    # memory stays bounded by ~max_round_bytes.  Same communication-free
+    # exscan+fill construction as hpcprof-mpi.
+    n_planes = len(uctx)
+    cum_pairs = np.concatenate(([0], np.cumsum(m_counts)))
+    cum_bytes = np.cumsum(plane_bytes) if n_planes else np.zeros(0, np.int64)
+    data_bytes = int(cum_bytes[-1]) if n_planes else 0
+    pid_u8 = np.ascontiguousarray(pid.astype("<u4")).view(np.uint8)
+    val_u8 = np.ascontiguousarray(val.astype("<f8")).view(np.uint8)
 
-    def fill(bucket: List[int]):
-        spent = 0
-        for i in bucket:
-            lo, hi = bounds[i], bounds[i + 1]
-            seg_m = met[lo:hi]
-            seg_p = pid[lo:hi]
-            seg_v = val[lo:hi]
-            um, ustarts = np.unique(seg_m, return_index=True)
-            midxs = np.zeros((len(um) + 1, 1),
-                             dtype=[("m", "<u4"), ("s", "<u8")])
-            midxs["m"][:-1, 0] = um
-            midxs["s"][:-1, 0] = ustarts
-            midxs["m"][-1, 0] = 0xFFFFFFFF
-            midxs["s"][-1, 0] = hi - lo
-            off = int(idx[i, 2])
-            blob = (midxs.tobytes() + seg_p.astype("<u4").tobytes()
-                    + seg_v.astype("<f8").tobytes())
-            mm[off:off + len(blob)] = np.frombuffer(blob, np.uint8)
-            spent += len(blob)
-            if spent >= max_round_bytes:   # out-of-core round boundary
-                mm.flush()
-                spent = 0
+    def runs(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
+        """Concatenated [start, start+len) ranges as one index array."""
+        total_ = int(lens.sum())
+        if total_ == 0:
+            return np.zeros(0, np.int64)
+        shift = np.concatenate(([0], np.cumsum(lens)[:-1]))
+        return np.repeat(starts - shift, lens) + np.arange(total_)
+
+    def build_segment(lo: int, hi: int) -> np.ndarray:
+        """All planes [lo, hi) as one contiguous byte segment."""
+        base = int(offsets[lo])
+        seg = np.empty(int(cum_bytes[hi - 1]) - base, np.uint8)
+        p0, p1 = int(cum_pairs[lo]), int(cum_pairs[hi])
+        # midxs stream: per plane its (metric, local start) pairs + sentinel
+        midxs = np.zeros((p1 - p0) + (hi - lo),
+                         dtype=[("m", "<u4"), ("s", "<u8")])
+        pair_dest = np.arange(p1 - p0) + (upair_plane[p0:p1] - lo)
+        sentinel_dest = (cum_pairs[lo + 1:hi + 1] - p0) + np.arange(hi - lo)
+        midxs["m"][pair_dest] = (upair[p0:p1] & 0xFFFFFFFF).astype(np.uint32)
+        midxs["s"][pair_dest] = up_first[p0:p1] - bounds[upair_plane[p0:p1]]
+        midxs["m"][sentinel_dest] = 0xFFFFFFFF
+        midxs["s"][sentinel_dest] = nnz[lo:hi]
+        off = offsets[lo:hi] - base
+        seg[runs(off, n_midxs[lo:hi] * 12)] = midxs.view(np.uint8)
+        b0, b1 = int(bounds[lo]) * 4, int(bounds[hi]) * 4
+        seg[runs(off + n_midxs[lo:hi] * 12, nnz[lo:hi] * 4)] = pid_u8[b0:b1]
+        seg[runs(off + n_midxs[lo:hi] * 12 + nnz[lo:hi] * 4,
+                 nnz[lo:hi] * 8)] = val_u8[b0 * 2:b1 * 2]
+        return seg
+
+    # contiguous plane ranges balanced by plane bytes, one per worker
+    targets = np.linspace(0, data_bytes, n_workers + 1)[1:-1]
+    plane_cuts = [0] + [int(c) for c in
+                        np.searchsorted(cum_bytes, targets)] + [n_planes]
+    _SEG_TEMP_FACTOR = 10
+    seg_budget = max(max_round_bytes // _SEG_TEMP_FACTOR, 1 << 20)
+
+    if data_bytes <= seg_budget:
+        # in-budget fast path: one vectorized build, workers only memcpy
+        buf = build_segment(0, n_planes) if n_planes else             np.zeros(0, np.uint8)
+
+        def fill(w: int):
+            lo = int(offsets[plane_cuts[w]]) if plane_cuts[w] < n_planes                 else data_bytes
+            hi = int(offsets[plane_cuts[w + 1]])                 if plane_cuts[w + 1] < n_planes else data_bytes
+            mm[data_start + lo:data_start + hi] = buf[lo:hi]
+    else:
+        # out-of-core: each worker assembles and writes its range in
+        # memory-bounded rounds (>= 1 plane per round)
+        def fill(w: int):
+            lo, hi = plane_cuts[w], plane_cuts[w + 1]
+            while lo < hi:
+                budget = (int(cum_bytes[lo - 1]) if lo else 0) + seg_budget
+                chunk_hi = int(np.searchsorted(cum_bytes, budget,
+                                               side="right"))
+                chunk_hi = min(max(chunk_hi, lo + 1), hi)
+                seg = build_segment(lo, chunk_hi)
+                off = data_start + int(offsets[lo])
+                mm[off:off + len(seg)] = seg
+                if chunk_hi < hi:          # out-of-core round boundary
+                    mm.flush()
+                lo = chunk_hi
 
     if n_workers > 1:
         with ThreadPoolExecutor(n_workers) as ex:
-            list(ex.map(fill, buckets))
+            list(ex.map(fill, range(n_workers)))
     else:
-        for b in buckets:
-            fill(b)
+        fill(0)
     mm.flush()
     return {"bytes": total, "nnz": int(len(val)), "n_ctx": int(len(uctx))}
 
@@ -291,14 +338,16 @@ class PMSReader:
             return None
         off = int(self._offsets[i])
         nv = int(self._nnz[i])
-        # rows until sentinel
-        rows = []
-        while True:
-            c, s = struct.unpack("<IQ", self._mm[off:off + 12])
-            rows.append((c, s))
-            off += 12
-            if c == 0xFFFFFFFF:
-                break
+        # planes are laid out in index order, so the next plane's offset
+        # (or the file end) bounds this one: row count falls out without
+        # scanning for the sentinel record by record
+        end = int(self._offsets[i + 1]) if i + 1 < len(self._offsets) \
+            else len(self._mm)
+        n_rows = (end - off - nv * 12) // 12
+        raw = np.frombuffer(self._mm[off:off + n_rows * 12],
+                            dtype=[("c", "<u4"), ("s", "<u8")])
+        rows = list(zip(raw["c"].tolist(), raw["s"].tolist()))
+        off += n_rows * 12
         mets = np.frombuffer(self._mm[off:off + nv * 4], "<u4")
         off += nv * 4
         vals = np.frombuffer(self._mm[off:off + nv * 8], "<f8")

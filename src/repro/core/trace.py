@@ -23,6 +23,7 @@ class TraceWriter:
         self.path = path
         self.identity = identity
         self._records: List[Tuple[int, int, int]] = []
+        self._chunks: List[np.ndarray] = []
         self._last_start = -1
         self.out_of_order = False
 
@@ -32,13 +33,42 @@ class TraceWriter:
         self._last_start = t_start
         self._records.append((t_start, t_end, ctx_id))
 
+    def append_many(self, starts, ends, ctx_ids) -> None:
+        """Bulk append: one vectorized out-of-order check and one array
+        copy instead of a Python call per event.  Produces byte-identical
+        files to the equivalent sequence of ``append`` calls."""
+        starts = np.asarray(starts)
+        n = len(starts)
+        if n == 0:
+            return
+        if self._records:   # preserve interleaving with scalar appends
+            self._chunks.append(
+                np.asarray(self._records, np.uint64).reshape(-1, 3))
+            self._records = []
+        s64 = starts.astype(np.int64)
+        if int(s64[0]) < self._last_start or bool((s64[1:] < s64[:-1]).any()):
+            self.out_of_order = True
+        self._last_start = int(s64[-1])
+        chunk = np.empty((n, 3), np.uint64)
+        chunk[:, 0] = starts
+        chunk[:, 1] = np.asarray(ends)
+        chunk[:, 2] = np.asarray(ctx_ids)
+        self._chunks.append(chunk)
+
     def close(self) -> None:
         import json
         with open(self.path, "wb") as f:
             hdr = json.dumps({"identity": self.identity,
                               "out_of_order": self.out_of_order}).encode()
             f.write(MAGIC + struct.pack("<I", len(hdr)) + hdr)
-            arr = np.asarray(self._records, np.uint64).reshape(-1, 3)
+            parts = list(self._chunks)
+            if self._records:
+                parts.append(
+                    np.asarray(self._records, np.uint64).reshape(-1, 3))
+            if parts:
+                arr = np.concatenate(parts)
+            else:
+                arr = np.zeros((0, 3), np.uint64)
             f.write(arr.tobytes())
 
 

@@ -1,0 +1,19 @@
+"""``shard_map`` across jax versions.
+
+``jax.shard_map`` (with ``check_vma``) is the >=0.5 top-level API; on
+older jax it lives in ``jax.experimental.shard_map`` and the flag is
+named ``check_rep``.  Call sites use this wrapper so the model/pipeline
+code reads like the current API everywhere.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)

@@ -1,0 +1,302 @@
+"""Equivalence of the vectorized aggregation pipeline with a retained
+reference implementation (ISSUE 1 tentpole contract).
+
+The reference below is the *pre-vectorization* algorithm, kept small and
+readable: per-profile dense scatter in file order, dense reverse-id sweep
+for inclusive propagation, accumulators folded in profile order.  The
+production pipeline (sparse COO + level-order sweep + communication-free
+workers) must reproduce it **bit for bit** — stats arrays via
+``np.array_equal``, CMS/PMS cubes and converted traces via file-byte
+comparison — on randomized synthetic CCTs and under parallel execution.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.aggregate import Database, GlobalTree, aggregate
+from repro.core.cct import CCT, Frame, GPU_OP, HOST, PLACEHOLDER
+from repro.core.metrics import default_registry
+from repro.core.profmt import read_profile, write_profile
+from repro.core.sparse import ProfileValues, write_cms, write_pms
+from repro.core.trace import TraceWriter, read_trace
+
+
+# --------------------------------------------------------------------------
+# Synthetic inputs: randomized CCTs with overlapping call paths
+# --------------------------------------------------------------------------
+def synth_inputs(tmp_path, seed, n_profiles=7, with_traces=True):
+    rng = np.random.default_rng(seed)
+    reg = default_registry()
+    gk, cpu, gi = reg.kind("gpu_kernel"), reg.kind("cpu"), reg.kind("gpu_inst")
+    paths, traces = [], []
+    for p in range(n_profiles):
+        cct = CCT()
+        nodes = []
+        for _ in range(int(rng.integers(20, 60))):
+            depth = 1 + int(rng.integers(5))
+            # a small shared frame pool forces cross-profile unification
+            frames = [Frame(HOST, f"fn{rng.integers(12)}",
+                            f"file{rng.integers(3)}.py",
+                            int(rng.integers(40)))
+                      for _ in range(depth)]
+            node = cct.insert_path(frames)
+            node.metrics.add(cpu, "time_ns", float(rng.integers(1, 10_000)))
+            nodes.append(node)
+        for k in range(int(rng.integers(2, 6))):
+            host = nodes[int(rng.integers(len(nodes)))]
+            ph = cct.get_or_insert(host, Frame(PLACEHOLDER, f"kernel:k{k}",
+                                               "0", 0))
+            ph.metrics.add(gk, "invocations", float(rng.integers(1, 9)))
+            ph.metrics.add(gk, "time_ns", float(rng.integers(1, 50_000)))
+            op = cct.insert_path([Frame(GPU_OP, f"op{k}", f"mod{k}", k)],
+                                 parent=ph)
+            op.metrics.add(gi, "samples", float(rng.integers(1, 300)))
+        path = str(tmp_path / f"p{p}.rpro")
+        write_profile(path, cct, reg, {"rank": p, "type": "cpu"}, [])
+        paths.append(path)
+        if with_traces:
+            tw = TraceWriter(path.replace(".rpro", ".rtrc"), {"rank": p})
+            t = 0
+            for node in nodes[:10]:
+                tw.append(t, t + 10, node.node_id)
+                t += 10
+            tw.close()
+            traces.append(tw.path)
+    return paths, traces
+
+
+# --------------------------------------------------------------------------
+# Reference implementation (retained pre-vectorization algorithm)
+# --------------------------------------------------------------------------
+class RefTree:
+    """Per-node dict tree keyed by (parent, Frame) — the original
+    unification data structure."""
+
+    def __init__(self):
+        self.frames = [Frame("root", "<program root>")]
+        self.parents = [-1]
+        self._index = {}
+
+    def child(self, parent, frame):
+        key = (parent, frame)
+        gid = self._index.get(key)
+        if gid is None:
+            gid = len(self.frames)
+            self.frames.append(frame)
+            self.parents.append(parent)
+            self._index[key] = gid
+        return gid
+
+    def merge_paths(self, prof):
+        n = len(prof.node_ids)
+        l2g = np.zeros(int(prof.node_ids.max()) + 1 if n else 1, np.int64)
+        for i in range(n):
+            nid, par = int(prof.node_ids[i]), int(prof.parents[i])
+            if par < 0:
+                l2g[nid] = 0
+                continue
+            l2g[nid] = self.child(int(l2g[par]), prof.frames[i])
+        return l2g
+
+    def merge_tree(self, other):
+        mapping = np.zeros(len(other.frames), np.int64)
+        for gid in range(1, len(other.frames)):
+            mapping[gid] = self.child(int(mapping[other.parents[gid]]),
+                                      other.frames[gid])
+        return mapping
+
+
+def ref_aggregate(profile_paths, n_ranks):
+    """Reference pipeline: same phase structure, scalar algorithms."""
+    ranks = [[] for _ in range(n_ranks)]
+    for i, p in enumerate(profile_paths):
+        ranks[i % n_ranks].append(p)
+    rank_results = []
+    for paths in ranks:
+        tree = RefTree()
+        profs = []
+        for path in paths:
+            prof = read_profile(path)
+            profs.append((path, prof, tree.merge_paths(prof)))
+        rank_results.append((tree, profs))
+    root = rank_results[0][0]
+    mappings = [None] + [root.merge_tree(t)
+                         for t, _ in rank_results[1:]]
+    all_profiles = []
+    for (tree, profs), conv in zip(rank_results, mappings):
+        for path, prof, mapping in profs:
+            gmap = mapping if conv is None else conv[mapping]
+            all_profiles.append((path, prof, gmap))
+
+    metrics = all_profiles[0][1].metrics if all_profiles else []
+    n_metrics = len(metrics)
+    n_ctx = len(root.frames)
+    parents = np.asarray(root.parents)
+
+    acc = {"sum": np.zeros((n_ctx, n_metrics)),
+           "min": np.full((n_ctx, n_metrics), np.inf),
+           "max": np.full((n_ctx, n_metrics), -np.inf),
+           "sumsq": np.zeros((n_ctx, n_metrics)),
+           "count": np.zeros((n_ctx, n_metrics))}
+    pvals, identities = [], {}
+    for pidx, (path, prof, gmap) in enumerate(all_profiles):
+        dense = np.zeros((n_ctx, n_metrics))
+        node_of_value = np.zeros(len(prof.values), np.int64)
+        for nid, start, count in prof.ranges:
+            node_of_value[start:start + count] = gmap[int(nid)]
+        np.add.at(dense, (node_of_value, prof.value_mids.astype(np.int64)),
+                  prof.values)
+        # dense reverse-id sweep: children created after parents, so each
+        # row folds into its parent exactly once, children in decreasing id
+        for gid in range(n_ctx - 1, 0, -1):
+            p = parents[gid]
+            if p >= 0:
+                dense[p] += dense[gid]
+        nz_ctx, nz_met = np.nonzero(dense)
+        vals = dense[nz_ctx, nz_met]
+        acc["sum"][nz_ctx, nz_met] += vals
+        np.minimum.at(acc["min"], (nz_ctx, nz_met), vals)
+        np.maximum.at(acc["max"], (nz_ctx, nz_met), vals)
+        acc["sumsq"][nz_ctx, nz_met] += vals ** 2
+        acc["count"][nz_ctx, nz_met] += 1
+        pvals.append(ProfileValues(pidx, nz_ctx.astype(np.uint32),
+                                   nz_met.astype(np.uint32), vals))
+        identities[pidx] = prof.identity
+
+    count = np.maximum(acc["count"], 1)
+    mean = acc["sum"] / count
+    var = np.maximum(acc["sumsq"] / count - mean ** 2, 0.0)
+    std = np.sqrt(var)
+    stats = {"sum": acc["sum"],
+             "min": np.where(np.isfinite(acc["min"]), acc["min"], 0.0),
+             "mean": mean,
+             "max": np.where(np.isfinite(acc["max"]), acc["max"], 0.0),
+             "std": std,
+             "cov": np.where(mean != 0,
+                             std / np.maximum(np.abs(mean), 1e-30), 0.0),
+             "count": acc["count"]}
+    return root, stats, pvals, all_profiles
+
+
+# --------------------------------------------------------------------------
+# Equivalence tests
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("seed,n_ranks,n_threads",
+                         [(0, 1, 1), (1, 3, 2), (2, 4, 4)])
+def test_bitwise_equivalence(tmp_path, seed, n_ranks, n_threads):
+    paths, traces = synth_inputs(tmp_path, seed)
+    out = str(tmp_path / "db")
+    db = aggregate(paths, out, n_ranks=n_ranks, n_threads=n_threads,
+                   trace_paths=traces)
+    root, stats, pvals, all_profiles = ref_aggregate(paths, n_ranks)
+
+    # tree identity: same frames in the same creation order
+    assert db.frames == root.frames
+    assert list(db.parents) == root.parents
+
+    # stats arrays: bitwise equal
+    for k, ref in stats.items():
+        assert np.array_equal(db.stats[k], ref), f"stat {k} diverged"
+
+    # sparse cubes: file bytes equal to cubes built from reference pvals
+    ref_cms = str(tmp_path / "ref.cms")
+    ref_pms = str(tmp_path / "ref.pms")
+    write_cms(ref_cms, pvals, n_workers=1)
+    write_pms(ref_pms, pvals, n_workers=1)
+    assert open(db.cms_path(), "rb").read() == open(ref_cms, "rb").read()
+    assert open(db.pms_path(), "rb").read() == open(ref_pms, "rb").read()
+
+    # trace conversion: byte-identical to the reference gmap rewrite
+    gmap_of = {path: gmap for path, _, gmap in all_profiles}
+    for tpath in traces:
+        td = read_trace(tpath)
+        gmap = gmap_of[tpath.replace(".rtrc", ".rpro")]
+        ref_t = str(tmp_path / ("ref_" + os.path.basename(tpath)))
+        tw = TraceWriter(ref_t, td.identity)
+        for s, e, c in zip(td.starts, td.ends, td.ctx):
+            tw.append(int(s), int(e), int(gmap[int(c)]))
+        tw.close()
+        got = os.path.join(out, os.path.basename(tpath))
+        assert open(got, "rb").read() == open(ref_t, "rb").read()
+
+
+def test_parallel_is_deterministic(tmp_path):
+    """Lock-free accumulation must not depend on thread scheduling."""
+    paths, _ = synth_inputs(tmp_path, 3, with_traces=False)
+    blobs = []
+    for rep in range(2):
+        out = str(tmp_path / f"db{rep}")
+        aggregate(paths, out, n_ranks=4, n_threads=4)
+        blobs.append((open(os.path.join(out, "stats.npz"), "rb").read(),
+                      open(os.path.join(out, "metrics.cms"), "rb").read()))
+    assert blobs[0] == blobs[1]
+
+
+def test_empty_profile_paths(tmp_path):
+    """No profiles: a root-only database, not an IndexError."""
+    out = str(tmp_path / "db")
+    db = aggregate([], out, n_ranks=4, n_threads=4)
+    assert len(db.frames) == 1
+    assert db.metrics == []
+    assert db.stats["sum"].shape == (1, 0)
+    db2 = Database.load(out)
+    assert len(db2.frames) == 1
+
+
+def test_out_of_range_trace_ctx_warns_and_maps_to_root(tmp_path):
+    paths, traces = synth_inputs(tmp_path, 4, n_profiles=2)
+    # corrupt one trace with a ctx id far outside the profile's id map
+    td = read_trace(traces[0])
+    tw = TraceWriter(traces[0], td.identity)
+    tw.append(0, 5, int(td.ctx[0]))
+    tw.append(5, 9, 10_000_000)
+    tw.close()
+    out = str(tmp_path / "db")
+    with pytest.warns(RuntimeWarning, match="outside the profile's id map"):
+        aggregate(paths, out, n_ranks=1, n_threads=1, trace_paths=traces)
+    conv = read_trace(os.path.join(out, os.path.basename(traces[0])))
+    assert conv.ctx[1] == 0, "out-of-range event must attribute to root"
+
+
+def test_children_index_matches_scan(tmp_path):
+    paths, _ = synth_inputs(tmp_path, 5, n_profiles=3, with_traces=False)
+    db = aggregate(paths, str(tmp_path / "db"), n_ranks=2, n_threads=2)
+    parents = np.asarray(db.parents)
+    for gid in range(len(db.frames)):
+        assert db.children_of(gid) == \
+            [i for i, p in enumerate(parents) if p == gid]
+
+
+def test_merge_paths_matches_reference_tree(tmp_path):
+    paths, _ = synth_inputs(tmp_path, 6, n_profiles=4, with_traces=False)
+    gt, rt = GlobalTree(), RefTree()
+    for p in paths:
+        prof = read_profile(p)
+        gmap_v = gt.merge_paths(prof)
+        gmap_r = rt.merge_paths(prof)
+        assert np.array_equal(gmap_v, gmap_r)
+    assert gt.frames == rt.frames
+    assert list(gt.parents) == rt.parents
+
+
+def test_trace_append_many_equivalence(tmp_path):
+    rng = np.random.default_rng(0)
+    starts = np.sort(rng.integers(0, 1000, 50)).astype(np.int64)
+    starts[20] = 0   # force an out-of-order event
+    ends = starts + 5
+    ctx = rng.integers(0, 99, 50).astype(np.int64)
+    a, b = str(tmp_path / "a.rtrc"), str(tmp_path / "b.rtrc")
+    wa = TraceWriter(a, {"rank": 0})
+    for s, e, c in zip(starts, ends, ctx):
+        wa.append(int(s), int(e), int(c))
+    wa.close()
+    wb = TraceWriter(b, {"rank": 0})
+    wb.append_many(starts[:7], ends[:7], ctx[:7])     # mixed bulk/scalar
+    for s, e, c in zip(starts[7:11], ends[7:11], ctx[7:11]):
+        wb.append(int(s), int(e), int(c))
+    wb.append_many(starts[11:], ends[11:], ctx[11:])
+    wb.close()
+    assert wa.out_of_order and wb.out_of_order
+    assert open(a, "rb").read() == open(b, "rb").read()

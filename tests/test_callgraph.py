@@ -1,6 +1,6 @@
 """GPU calling-context-tree reconstruction (paper §6.3, Fig. 5)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.callgraph import CallGraph, CCTOut, reconstruct
 

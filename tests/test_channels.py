@@ -3,7 +3,7 @@ import threading
 from collections import deque
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.channels import (EMPTY, BidirectionalChannel, ChannelSet,
                                  SpscQueue)
@@ -102,3 +102,62 @@ def test_push_failure_counts():
     q.try_push(3)
     assert q.push_failures == 2
     assert q.pushes == 1
+
+
+# ---------------------------------------------------------------------------
+# batch ops (ISSUE 1: amortize per-item Python overhead)
+# ---------------------------------------------------------------------------
+def test_push_many_pop_many_fifo():
+    q = SpscQueue(8)
+    assert q.try_push_many(list(range(5))) == 5
+    assert q.try_push_many([5, 6, 7, 8, 9]) == 3, "only 3 slots left"
+    assert q.try_pop_many() == [0, 1, 2, 3, 4, 5, 6, 7]
+    assert q.try_pop_many() == []
+    # wraparound across the ring boundary
+    assert q.try_push_many([10, 11, 12, 13, 14, 15]) == 6
+    assert q.try_pop_many(limit=2) == [10, 11]
+    assert q.try_push_many([16, 17, 18, 19]) == 4
+    assert q.try_pop_many() == [12, 13, 14, 15, 16, 17, 18, 19]
+
+
+def test_push_many_full_and_counters():
+    q = SpscQueue(2)
+    assert q.try_push_many([1, 2, 3]) == 2
+    assert q.push_failures == 1   # partial batch counts one failure
+    assert q.try_push_many([4]) == 0
+    assert q.push_failures == 2
+    assert q.pushes == 2
+    assert q.try_pop_many() == [1, 2]
+    assert q.pops == 2
+
+
+def test_batch_interleaves_with_scalar_ops():
+    q = SpscQueue(16)
+    q.try_push(0)
+    q.try_push_many([1, 2, 3])
+    q.try_push(4)
+    assert q.try_pop() == 0
+    assert q.try_pop_many(limit=3) == [1, 2, 3]
+    assert q.try_pop() == 4
+
+
+def test_batch_threaded_stress():
+    """Producer pushes batches, consumer pops batches: FIFO survives."""
+    q = SpscQueue(512)
+    N = 50_000
+    out = []
+
+    def producer():
+        i = 0
+        while i < N:
+            i += q.try_push_many(list(range(i, min(i + 64, N))))
+
+    def consumer():
+        while len(out) < N:
+            out.extend(q.try_pop_many(128))
+
+    tp = threading.Thread(target=producer)
+    tc = threading.Thread(target=consumer)
+    tp.start(); tc.start()
+    tp.join(timeout=60); tc.join(timeout=60)
+    assert out == list(range(N))

@@ -75,8 +75,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
 
 d = %r
-mesh8 = jax.make_mesh((8,), ("data",),
-                      axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh8 = make_mesh((8,), ("data",))
 sh8 = NamedSharding(mesh8, P("data"))
 x = jax.device_put(jnp.arange(64.0).reshape(8, 8), sh8)
 mgr = CheckpointManager(d)
@@ -84,8 +84,7 @@ mgr.save(5, {"x": x})
 assert len(x.addressable_shards) == 8
 
 # elastic restore onto a DIFFERENT mesh shape (2 x 4, sharded both dims)
-mesh24 = jax.make_mesh((2, 4), ("a", "b"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh24 = make_mesh((2, 4), ("a", "b"))
 sh24 = NamedSharding(mesh24, P("a", "b"))
 step, out = mgr.restore({"x": jax.ShapeDtypeStruct((8, 8), jnp.float32)},
                         shardings={"x": sh24})

@@ -1,7 +1,7 @@
 """Derived metrics (§4.5/§7.1), idleness blame (§7.2/§8.5), viewer (§7)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.blame import blame_gpu_idleness, blame_report
 from repro.core.derived import (DerivedMetric, GPU_UTILIZATION, SYNC_DIFF,

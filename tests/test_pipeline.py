@@ -19,8 +19,8 @@ def test_bubble_fraction():
 
 
 def test_single_stage_identity_mesh():
-    mesh = jax.make_mesh((1,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("stage",))
     w = jnp.full((1, 4, 4), 2.0)          # one stage, a 4x4 weight
 
     def layer(p, x):
@@ -39,8 +39,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from repro.distributed.pipeline import pipeline_apply
 
-mesh = jax.make_mesh((4,), ("stage",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("stage",))
 key = jax.random.PRNGKey(0)
 W = jax.random.normal(key, (4, 8, 8)) * 0.3   # 4 stages
 

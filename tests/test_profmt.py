@@ -1,7 +1,7 @@
 """Profile file format roundtrip (paper §4.6 Fig. 3b) + CCT + metrics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.cct import CCT, Frame, HOST, PLACEHOLDER, unwind_host_stack
 from repro.core.metrics import default_registry

@@ -1,7 +1,7 @@
 """PMS / CMS sparse-cube formats (paper §6.2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.sparse import (CMSReader, PMSReader, ProfileValues,
                                dense_cube_nbytes, write_cms, write_pms)

@@ -11,6 +11,13 @@ def compiled_text(fn, *args):
     return jax.jit(fn).lower(*args).compile().as_text()
 
 
+def xla_cost(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a list of per-computation
+    dicts on jax 0.4.x and a flat dict on newer versions."""
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, list) else ca
+
+
 def test_parse_shape():
     assert parse_shape("f32[4,8]") == (32, 128)
     assert parse_shape("(f32[2], bf16[3,3])") == (2 + 9, 8 + 18)
@@ -31,7 +38,7 @@ def test_scan_trip_count_and_cost_scale():
     whiles = [op for op in mod.all_ops() if op.opcode == "while"]
     assert whiles and whiles[0].trip_count == 10
     fr, _ = mod.cost_scale()
-    xla_flops = c.cost_analysis()["flops"]
+    xla_flops = xla_cost(c)["flops"]
     assert xla_flops * fr == pytest.approx(10 * 2 * 64 ** 3, rel=0.05)
 
 
@@ -49,7 +56,7 @@ def test_nested_scan_multipliers():
     mod = parse_hlo(c.as_text())
     fr, _ = mod.cost_scale()
     want = 15 * 2 * 32 ** 3
-    assert c.cost_analysis()["flops"] * fr == pytest.approx(want, rel=0.05)
+    assert xla_cost(c)["flops"] * fr == pytest.approx(want, rel=0.05)
 
 
 def test_op_context_has_scopes_and_loops():
@@ -79,7 +86,11 @@ def test_stack_frames_parsed():
     def f(x):
         return g(x) + 1
 
-    mod = parse_hlo(compiled_text(f, jnp.ones((8,))))
+    txt = compiled_text(f, jnp.ones((8,)))
+    if "stack_frames" not in txt.lower():
+        pytest.skip("this jax/platform emits no StackFrames table in "
+                    "compiled HLO text")
+    mod = parse_hlo(txt)
     assert mod.frames, "StackFrames table must parse"
     chains = [mod.frame_chain(fid) for fid in mod.frames]
     fns = {fr.name for ch in chains for fr in ch}   # frame_chain -> cct.Frame
@@ -164,5 +175,7 @@ def test_fusion_cost_attribution():
     t = mod.total_costs()
     assert t["flops_once"] > 0
     assert t["bytes_once"] > 0
-    # no loops here: scaled == once
-    assert t["flops_scaled"] == pytest.approx(t["flops_once"])
+    # no loops here: scaled == once, up to O(1) flops from scalar callee
+    # computations (e.g. reduce's `add`) that some jax versions share
+    # across call sites (counted once by XLA, per-site by our multiplier)
+    assert t["flops_scaled"] == pytest.approx(t["flops_once"], rel=1e-4)

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.configs import SHAPES, get_config
 from repro.configs.base import ShapeConfig
@@ -138,7 +138,10 @@ def test_error_feedback_converges():
 
 
 def test_compressed_psum_matches_plain():
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:   # moved out of experimental in newer jax
+        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.launch.mesh import make_test_mesh
     mesh = make_test_mesh((1, 1))
