@@ -77,12 +77,14 @@ def run(n_steps: int = 30, out_dir: str = "/tmp/repro_bench_overhead",
     }
 
 
-def main():
+def main(small: bool = False):
     out = {}
     # overhead amortizes with kernel duration (the paper's kernels are much
     # longer than a reduced-config CPU step): report two step sizes
-    for label, shape, steps in (("small", (4, 128), 30),
-                                ("large", (8, 512), 8)):
+    # (--small keeps only the quick config with fewer steps: CI smoke)
+    configs = (("small", (4, 128), 10),) if small else \
+        (("small", (4, 128), 30), ("large", (8, 512), 8))
+    for label, shape, steps in configs:
         r = run(n_steps=steps, batch_shape=shape)
         for k, v in r.items():
             print(f"bench_overhead,{label}_{k},{v}")

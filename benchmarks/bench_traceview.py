@@ -1,0 +1,138 @@
+"""Traceview throughput (paper §4.4/§7; "Preparing for Performance
+Analysis at Exascale" motivates the merged trace.db).
+
+Synthesizes an 8-rank x 4-stream measurement (1M events by default),
+then measures the two post-mortem stages the subsystem must keep fast:
+
+- **merge**: N per-identity ``.rtrc`` files -> one seekable ``trace.db``
+  (events/sec) — the sort-on-read flag is consumed here, once;
+- **raster**: sampling the merged database into a 200x64 depth-over-time
+  view (pixels/sec) — the acceptance bar is < 1 s for the full view, which
+  only holds if sampling stays O(width log events) per line with no
+  per-event Python loop.
+
+A small-subset cross-check asserts the vectorized Summary view equals the
+per-event reference ``viewer.trace_statistic`` on the same lines.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.cct import Frame
+from repro.core.trace import TraceWriter
+
+RASTER_BUDGET_S = 1.0      # ISSUE 2 acceptance bar (200x64 @ 1M events)
+
+
+def synth_tree(rng, n_ctx: int = 2000, max_depth: int = 8):
+    """Random CCT: parents precede children, depth capped."""
+    parents = np.full(n_ctx, -1, np.int64)
+    depth = np.zeros(n_ctx, np.int64)
+    for i in range(1, n_ctx):
+        p = int(rng.integers(0, i))
+        if depth[p] >= max_depth:
+            p = int(parents[p])
+        parents[i] = p
+        depth[i] = depth[p] + 1
+    frames = [Frame("root", "<program root>")] + [
+        Frame("host" if d <= 2 else "placeholder", f"fn{i}", "app.py", int(d))
+        for i, d in enumerate(depth[1:], start=1)]
+    return frames, parents
+
+
+class _SynthDB:
+    """Just enough of aggregate.Database for raster/stats/render."""
+
+    def __init__(self, frames, parents):
+        self.frames = frames
+        self.parents = parents
+
+
+def synth_measurement(tmp: str, n_events: int, n_ranks: int = 8,
+                      n_streams: int = 4, n_ctx: int = 2000):
+    rng = np.random.default_rng(7)
+    frames, parents = synth_tree(rng, n_ctx)
+    n_lines = n_ranks * n_streams
+    per_line = n_events // n_lines
+    paths = []
+    for rank in range(n_ranks):
+        for stream in range(n_streams):
+            gaps = rng.integers(0, 2000, per_line)
+            durs = rng.integers(100, 5000, per_line)
+            starts = np.cumsum(gaps + durs) - durs
+            ends = starts + durs
+            ctx = rng.integers(1, n_ctx, per_line)
+            tw = TraceWriter(
+                os.path.join(tmp, f"trace_r{rank}_s{stream}.rtrc"),
+                {"rank": rank, "stream": stream, "type": "gpu"})
+            tw.append_many(starts, ends, ctx)
+            tw.close()
+            paths.append(tw.path)
+    return paths, _SynthDB(frames, parents)
+
+
+def run(n_events: int = 1_000_000, width: int = 200, height: int = 64):
+    from repro.core import viewer
+    from repro.core.trace import TraceData
+    from repro.traceview import TraceDB, build_db, rasterize, render, summary
+
+    tmp = tempfile.mkdtemp(prefix="repro_traceview_")
+    paths, db = synth_measurement(tmp, n_events)
+
+    t0 = time.perf_counter()
+    tdb = build_db(paths, os.path.join(tmp, "trace.db"))
+    merge_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    lines = tdb.line_views()
+    raster = rasterize(lines, db.parents, width=width, height=height,
+                       depth=2)
+    text = render(raster, db)
+    raster_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    rows = summary(lines, db, depth=2, top=10)
+    summary_s = time.perf_counter() - t0
+
+    # cross-check the vectorized Summary against the per-event reference
+    # on a 2-line subset (trace_statistic loops in Python)
+    sub = [TraceData(td.identity, np.asarray(td.starts)[:5000],
+                     np.asarray(td.ends)[:5000], np.asarray(td.ctx)[:5000])
+           for td in lines[:2]]
+    ref = dict(viewer.trace_statistic(sub, db, depth=2, top=10**9))
+    got = dict(summary(sub, db, depth=2, top=10**9))
+    for name, frac in ref.items():
+        assert abs(got.get(name, 0.0) - frac) < 1e-12, \
+            f"summary mismatch at {name}: {got.get(name)} vs {frac}"
+
+    n_pixels = raster.pixels.size
+    return {
+        "n_events": tdb.n_events,
+        "n_lines": len(tdb.lines),
+        "db_bytes": os.path.getsize(tdb.path),
+        "merge_s": merge_s,
+        "merge_events_per_s": tdb.n_events / merge_s,
+        "raster_s": raster_s,
+        "raster_pixels": n_pixels,
+        "raster_pixels_per_s": n_pixels / raster_s,
+        "raster_under_budget": bool(raster_s < RASTER_BUDGET_S),
+        "raster_budget_s": RASTER_BUDGET_S,
+        "summary_s": summary_s,
+        "summary_matches_trace_statistic": True,
+        "render_chars": len(text),
+    }
+
+
+def main(small: bool = False):
+    r = run(n_events=100_000) if small else run()
+    for k, v in r.items():
+        print(f"bench_traceview,{k},{v}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

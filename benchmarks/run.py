@@ -17,7 +17,8 @@ import time
 import traceback
 
 from benchmarks import (bench_aggregation, bench_channels, bench_overhead,
-                        bench_reconstruction, bench_roofline, bench_sparse)
+                        bench_reconstruction, bench_roofline, bench_sparse,
+                        bench_traceview)
 
 ALL = {
     "channels": bench_channels,        # §4.1 wait-free channels
@@ -26,10 +27,11 @@ ALL = {
     "reconstruction": bench_reconstruction,  # §6.3 Fig. 5
     "overhead": bench_overhead,        # §8.1 measurement overhead
     "roofline": bench_roofline,        # deliverable (g)
+    "traceview": bench_traceview,      # §4.4/§7 trace.db merge + raster
 }
 
 # benchmarks whose results are persisted as BENCH_<name>.json
-TRACKED = ("aggregation", "channels")
+TRACKED = ("aggregation", "channels", "traceview")
 
 
 def main(argv=None):
@@ -50,6 +52,9 @@ def main(argv=None):
             kwargs = {}
             if "small" in inspect.signature(mod.main).parameters:
                 kwargs["small"] = args.small
+            elif args.small:
+                print(f"# note: {name} has no --small mode; "
+                      "running full size", flush=True)
             results = mod.main(**kwargs)
             if name in TRACKED and isinstance(results, dict):
                 os.makedirs(args.json_dir, exist_ok=True)

@@ -21,8 +21,9 @@ Pipeline phases, exactly as the paper stages them:
    workers after exscan).  Per-profile values stream into the PMS/CMS
    writers.
 5. **Trace + final outputs** — trace files are rewritten in terms of global
-   ctx ids (vectorized gather + bulk ``TraceWriter.append_many``); tree,
-   stats, and sparse cubes land in the database directory.
+   ctx ids (vectorized gather + bulk ``TraceWriter.append_many``) and
+   merged into one seekable ``trace.db`` (repro.traceview); tree, stats,
+   and sparse cubes land in the database directory.
 
 "Ranks" are worker threads here (single-host container): the reduction
 tree, exscan offset computation, and nnz-balanced work splitting are the
@@ -43,7 +44,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.cct import Frame, GPU_OP, PLACEHOLDER
+from repro.core.cct import Frame, GPU_OP, PLACEHOLDER, tree_depths
 from repro.core.profmt import (FRAME_KIND_IDX, ProfileData, read_profile)
 from repro.core.sparse import ProfileValues, write_cms, write_pms
 from repro.core.structure import HloModule
@@ -197,18 +198,8 @@ class GlobalTree:
         return np.arange(len(self.frames))  # creation order is topological
 
     def depths(self) -> np.ndarray:
-        """Per-node depth (root = 0), computed with vectorized parent
-        jumps: O(max_depth) passes over the id array."""
-        parents = np.asarray(self.parents, np.int64)
-        depth = np.zeros(len(parents), np.int64)
-        cur = parents.copy()
-        while True:
-            mask = cur >= 0
-            if not mask.any():
-                break
-            depth[mask] += 1
-            cur[mask] = parents[cur[mask]]
-        return depth
+        """Per-node depth (root = 0), see ``cct.tree_depths``."""
+        return tree_depths(self.parents)
 
 
 # --------------------------------------------------------------------------
@@ -253,6 +244,8 @@ class Database:
         default=None, init=False, repr=False)
     _child_parents: Optional[np.ndarray] = dataclasses.field(
         default=None, init=False, repr=False)
+    _depths: Optional[np.ndarray] = dataclasses.field(
+        default=None, init=False, repr=False)
 
     @classmethod
     def load(cls, out_dir: str) -> "Database":
@@ -280,6 +273,16 @@ class Database:
             self._child_order = order
         lo, hi = np.searchsorted(self._child_parents, [gid, gid + 1])
         return [int(i) for i in self._child_order[lo:hi]]
+
+    def depths(self) -> np.ndarray:
+        """Per-context depth (root = 0), cached — the traceview raster and
+        interval stats project contexts through this."""
+        if self._depths is None:
+            self._depths = tree_depths(self.parents)
+        return self._depths
+
+    def trace_db_path(self) -> str:
+        return os.path.join(self.out_dir, "trace.db")
 
     def cms_path(self) -> str:
         return os.path.join(self.out_dir, "metrics.cms")
@@ -376,6 +379,7 @@ def aggregate(profile_paths: Sequence[str], out_dir: str, *,
               n_ranks: int = 4, n_threads: int = 4,
               structures: Optional[Dict[str, HloModule]] = None,
               trace_paths: Sequence[str] = (),
+              trace_db: bool = True,
               timing: Optional[dict] = None) -> Database:
     os.makedirs(out_dir, exist_ok=True)
     t0 = time.monotonic()
@@ -481,6 +485,7 @@ def aggregate(profile_paths: Sequence[str], out_dir: str, *,
 
     # phase 5: trace conversion (vectorized gather through gmap)
     path_to_gmap = {path: gmap for path, prof, gmap in all_profiles}
+    converted_traces: List[str] = []
     for tpath in trace_paths:
         td = read_trace(tpath)
         ppath = tpath.replace(".rtrc", ".rpro")
@@ -500,6 +505,19 @@ def aggregate(profile_paths: Sequence[str], out_dir: str, *,
                             gmap[np.clip(td.ctx, 0, len(gmap) - 1)], 0)
         out.append_many(td.starts, td.ends, gids)
         out.close()
+        if out.path in converted_traces:
+            warnings.warn(
+                f"{tpath}: basename collides with another trace path; "
+                "the earlier converted trace was overwritten",
+                RuntimeWarning)
+        else:
+            converted_traces.append(out.path)
+    if converted_traces and trace_db:
+        # post-mortem merge into the seekable trace.db (traceview, §4.4):
+        # the converted traces already carry global ctx ids, so the merged
+        # database is directly renderable against this Database
+        from repro.traceview.tracedb import build_db
+        build_db(converted_traces, os.path.join(out_dir, "trace.db"))
 
     meta = {
         "frames": [[f.kind, f.name, f.module, f.line] for f in root.frames],

@@ -14,15 +14,14 @@ import numpy as np
 from repro.core.trace import TraceData
 
 
-def blame_gpu_idleness(cpu_traces: Sequence[TraceData],
-                       gpu_traces: Sequence[TraceData],
-                       ) -> Tuple[Dict[int, float], float]:
-    """Returns ({cpu ctx id: blamed idle ns}, total idle ns).
+def idle_segments(cpu_traces: Sequence[TraceData],
+                  gpu_traces: Sequence[TraceData]):
+    """Yield (t0, t1, active cpu ctx set) for every elementary segment
+    where zero GPU streams are active and >= 1 CPU thread is.
 
-    Sweep-line over all interval boundaries; for each elementary segment
-    with zero active GPU streams and >= 1 active CPU thread, the segment
-    length is split evenly among active CPU contexts (normalized blame,
-    §7.2).
+    Sweep-line over all interval boundaries; ``blame_gpu_idleness`` folds
+    the segments, and ``traceview.stats.blame_over_time`` bins them — one
+    sweep, one set of boundary semantics.
     """
     events: List[Tuple[int, int, int, int]] = []  # (t, kind, delta, ctx)
     GPU, CPU = 0, 1
@@ -35,20 +34,14 @@ def blame_gpu_idleness(cpu_traces: Sequence[TraceData],
             events.append((int(s), CPU, +1, int(c)))
             events.append((int(e), CPU, -1, int(c)))
     if not events:
-        return {}, 0.0
+        return
     events.sort()
-    blame: Dict[int, float] = {}
     gpu_active = 0
     cpu_active: Dict[int, int] = {}
-    total_idle = 0.0
     t_prev = events[0][0]
     for t, kind, delta, ctx in events:
-        seg = t - t_prev
-        if seg > 0 and gpu_active == 0 and cpu_active:
-            total_idle += seg
-            share = seg / len(cpu_active)
-            for c in cpu_active:
-                blame[c] = blame.get(c, 0.0) + share
+        if t > t_prev and gpu_active == 0 and cpu_active:
+            yield t_prev, t, set(cpu_active)
         t_prev = t
         if kind == GPU:
             gpu_active += delta
@@ -58,6 +51,24 @@ def blame_gpu_idleness(cpu_traces: Sequence[TraceData],
                 cpu_active.pop(ctx, None)
             else:
                 cpu_active[ctx] = n
+
+
+def blame_gpu_idleness(cpu_traces: Sequence[TraceData],
+                       gpu_traces: Sequence[TraceData],
+                       ) -> Tuple[Dict[int, float], float]:
+    """Returns ({cpu ctx id: blamed idle ns}, total idle ns).
+
+    Each all-streams-idle segment's length is split evenly among the CPU
+    contexts active during it (normalized blame, §7.2).
+    """
+    blame: Dict[int, float] = {}
+    total_idle = 0.0
+    for t0, t1, active in idle_segments(cpu_traces, gpu_traces):
+        seg = t1 - t0
+        total_idle += seg
+        share = seg / len(active)
+        for c in active:
+            blame[c] = blame.get(c, 0.0) + share
     return blame, total_idle
 
 

@@ -19,6 +19,8 @@ import dataclasses
 import threading
 from typing import Dict, Iterator, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.metrics import MetricRegistry, NodeMetrics
 
 HOST = "host"
@@ -26,6 +28,23 @@ PLACEHOLDER = "placeholder"
 GPU_OP = "gpu_op"
 GPU_FUNC = "gpu_func"
 GPU_LOOP = "gpu_loop"
+
+
+def tree_depths(parents: np.ndarray) -> np.ndarray:
+    """Per-node depth (root = 0) for a parent-id array, via vectorized
+    parent jumps: O(max_depth) passes.  The one implementation behind
+    ``GlobalTree.depths``, ``Database.depths``, and the traceview
+    raster's depth projection."""
+    parents = np.asarray(parents, np.int64)
+    depth = np.zeros(len(parents), np.int64)
+    cur = parents.copy()
+    while True:
+        mask = cur >= 0
+        if not mask.any():
+            break
+        depth[mask] += 1
+        cur[mask] = parents[cur[mask]]
+    return depth
 
 
 @dataclasses.dataclass(frozen=True)

@@ -287,3 +287,15 @@ class Profiler:
                 tw.close()
                 out[f"gpu_trace_{sid}"] = tw.path
         return out
+
+    def build_trace_db(self, out_path: Optional[str] = None) -> str:
+        """Post-mortem step next to aggregation: merge this measurement
+        directory's per-thread/per-stream trace files into one seekable
+        ``trace.db`` (repro.traceview).  Note the merged events carry this
+        rank's *local* ctx ids; ``aggregate(..., trace_paths=...)`` builds
+        the globally-renumbered trace.db in the database directory.
+        """
+        from repro.traceview.tracedb import build_db
+        out_path = out_path or os.path.join(self.out_dir, "trace.db")
+        build_db(self.out_dir, out_path)
+        return out_path

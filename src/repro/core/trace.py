@@ -24,6 +24,9 @@ class TraceWriter:
         self.identity = identity
         self._records: List[Tuple[int, int, int]] = []
         self._chunks: List[np.ndarray] = []
+        # invariant: the start of the last event written through EITHER
+        # append API — append after append_many must compare against the
+        # chunk's last start (tests/test_traceview.py interleaves both)
         self._last_start = -1
         self.out_of_order = False
 
@@ -78,6 +81,20 @@ class TraceData:
     starts: np.ndarray
     ends: np.ndarray
     ctx: np.ndarray
+
+
+def sorted_by_start(td: TraceData) -> TraceData:
+    """Events stable-sorted by start time, as int64 arrays — the §4.4
+    post-mortem sort, shared by the trace.db merge and the traceview
+    interval stats.  Returns a new TraceData; arrays are views of the
+    input when already sorted."""
+    starts = np.asarray(td.starts, np.int64)
+    ends = np.asarray(td.ends, np.int64)
+    ctx = np.asarray(td.ctx, np.int64)
+    if len(starts) > 1 and bool((starts[1:] < starts[:-1]).any()):
+        order = np.argsort(starts, kind="stable")
+        starts, ends, ctx = starts[order], ends[order], ctx[order]
+    return TraceData(td.identity, starts, ends, ctx)
 
 
 def read_trace(path: str) -> TraceData:

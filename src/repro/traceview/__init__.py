@@ -1,0 +1,28 @@
+"""Time-centric trace analysis (paper §4.4, §7): merged ``trace.db``,
+hpctraceviewer-style depth×time rendering, and interval statistics across
+ranks and streams.
+
+Typical post-mortem flow::
+
+    db = aggregate(profiles, out, trace_paths=traces)   # writes trace.db
+    tdb = TraceDB(os.path.join(out, "trace.db"))
+    print(render_view(tdb.line_views(), db, width=120, height=16, depth=2))
+"""
+from repro.traceview.filter import TraceFilter, apply_filter, subtree_mask
+from repro.traceview.raster import (IDLE, Raster, ancestors_at_depth,
+                                    rasterize, tree_depths)
+from repro.traceview.render import (depth_selector, render, render_view,
+                                    statistic_panel)
+from repro.traceview.stats import (blame_over_time, interval_profile,
+                                   merge_intervals, occupancy, summary,
+                                   top_kernels, windowed_blame)
+from repro.traceview.tracedb import TraceDB, build_db
+
+__all__ = [
+    "TraceDB", "build_db",
+    "Raster", "rasterize", "ancestors_at_depth", "tree_depths", "IDLE",
+    "render", "render_view", "depth_selector", "statistic_panel",
+    "summary", "interval_profile", "occupancy", "top_kernels",
+    "blame_over_time", "windowed_blame", "merge_intervals",
+    "TraceFilter", "apply_filter", "subtree_mask",
+]

@@ -1,0 +1,230 @@
+"""Interval statistics over trace windows (paper §7; THAPI-style timeline
+summarization).
+
+Three views, all over an arbitrary ``[t0, t1)`` window:
+
+- **Summary** (`summary`, `interval_profile`): the trace view's Summary
+  tab — a time-weighted profile of the window.  Each event contributes
+  its overlap with the window to its context, projected to a call-stack
+  depth.  Over the full time range this reproduces
+  ``viewer.trace_statistic`` exactly (event durations are integer ns, so
+  float64 accumulation is order-independent) while staying vectorized.
+- **Idleness / blame over time** (`blame_over_time`): per rank, the
+  fraction of GPU streams idle in each of N bins, plus all-streams-idle
+  time split equally across the CPU contexts active during it — the
+  binned generalization of ``core.blame.blame_gpu_idleness``; per-context
+  totals summed over bins equal the unbinned sweep's output.
+- **Top-k kernels** (`top_kernels`): largest GPU contexts by busy time in
+  the window.
+
+Per-line occupancy (`occupancy`) exposes the busy-time-per-bin primitive:
+for every line, busy + idle sums to the window length (the property test
+in tests/test_traceview.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.blame import blame_gpu_idleness, idle_segments
+from repro.core.trace import TraceData, sorted_by_start
+from repro.traceview.raster import ancestors_at_depth, tree_depths
+
+
+# --------------------------------------------------------------------------
+# coverage primitives
+# --------------------------------------------------------------------------
+def merge_intervals(starts: np.ndarray, ends: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Union of (possibly overlapping) intervals, as disjoint sorted
+    intervals — fully vectorized (sort + running max + group reduce)."""
+    starts = np.asarray(starts, np.int64)
+    ends = np.asarray(ends, np.int64)
+    if not len(starts):
+        return starts, ends
+    order = np.argsort(starts, kind="stable")
+    s, e = starts[order], ends[order]
+    emax = np.maximum.accumulate(e)
+    new_group = np.ones(len(s), bool)
+    new_group[1:] = s[1:] > emax[:-1]
+    m_start = s[new_group]
+    m_end = np.maximum.reduceat(e, np.flatnonzero(new_group))
+    return m_start, m_end
+
+
+def coverage_at(m_start: np.ndarray, m_end: np.ndarray,
+                t: np.ndarray) -> np.ndarray:
+    """C(t) = total covered time in [-inf, t) for disjoint sorted
+    intervals, evaluated at many ``t`` at once."""
+    if not len(m_start):
+        return np.zeros(len(np.atleast_1d(t)), np.int64)
+    dur = m_end - m_start
+    cum = np.concatenate([[0], np.cumsum(dur)])
+    idx = np.searchsorted(m_start, t, side="right")
+    safe = np.maximum(idx - 1, 0)
+    partial = np.clip(t - m_start[safe], 0, dur[safe]) * (idx > 0)
+    return cum[safe] * (idx > 0) + partial
+
+
+def occupancy(lines: Sequence[TraceData], t0: int, t1: int,
+              nbins: int) -> np.ndarray:
+    """(n_lines, nbins) busy ns per bin.  Busy time is the *union* of the
+    line's events, so for any line busy + idle == t1 - t0 exactly."""
+    edges = int(t0) + (int(t1) - int(t0)) \
+        * np.arange(nbins + 1, dtype=np.int64) // nbins
+    out = np.zeros((len(lines), nbins), np.float64)
+    for i, td in enumerate(lines):
+        m_s, m_e = merge_intervals(np.clip(td.starts, t0, t1),
+                                   np.clip(td.ends, t0, t1))
+        out[i] = np.diff(coverage_at(m_s, m_e, edges))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Summary view
+# --------------------------------------------------------------------------
+def interval_profile(lines: Sequence[TraceData], n_ctx: int,
+                     t0: int, t1: int) -> np.ndarray:
+    """(n_ctx,) time-weighted ns per context over the window — each
+    event's overlap with [t0, t1) scatter-added onto its context.
+
+    Lines are expected start-sorted (TraceDB views are); unsorted lines
+    are sorted here so pre-merge TraceData gives the same answer.  Both
+    window edges prune: events are sliced to [lo, hi) where ``hi`` bounds
+    starts < t1 and ``lo`` drops the prefix whose running-max end <= t0,
+    so a narrow window touches few events."""
+    out = np.zeros(n_ctx, np.float64)
+    for td in lines:
+        td = sorted_by_start(td)
+        starts = td.starts
+        if not len(starts):
+            continue
+        hi = int(np.searchsorted(starts, t1, side="left"))
+        lo = int(np.searchsorted(
+            np.maximum.accumulate(td.ends[:hi]), t0, side="right"))
+        ends = td.ends[lo:hi]
+        overlap = np.minimum(ends, t1) - np.maximum(starts[lo:hi], t0)
+        sel = overlap > 0
+        ctx = td.ctx[lo:hi][sel]
+        # out-of-range ctx attributes to root, like viewer.trace_statistic
+        # (and aggregate's phase-5 handling of the same condition)
+        ctx = np.where((ctx >= 0) & (ctx < n_ctx), ctx, 0)
+        np.add.at(out, ctx, overlap[sel].astype(np.float64))
+    return out
+
+
+def summary(lines: Sequence[TraceData], db, *, t0: Optional[int] = None,
+            t1: Optional[int] = None, depth: int = 2, top: int = 10,
+            depths: Optional[np.ndarray] = None) -> List[Tuple[str, float]]:
+    """The Summary tab: fraction of window trace-area per routine at the
+    given depth.  With the full window this matches
+    ``viewer.trace_statistic`` on the same lines."""
+    if t0 is None:
+        t0 = min((int(td.starts[0]) for td in lines if len(td.starts)),
+                 default=0)
+    if t1 is None:
+        t1 = max((int(td.ends.max()) for td in lines if len(td.ends)),
+                 default=t0)
+    prof = interval_profile(lines, len(db.frames), t0, t1)
+    parents = np.asarray(db.parents, np.int64)
+    if depths is None:   # aggregate.Database caches its depth array
+        depths = db.depths() if hasattr(db, "depths") else \
+            tree_depths(parents)
+    anc = ancestors_at_depth(parents, depths, depth)
+    by_anc = np.zeros(len(prof))
+    np.add.at(by_anc, anc, prof)
+    # distinct contexts can project to the same routine (one function,
+    # many call paths): group by name, like trace_statistic
+    area: Dict[str, float] = {}
+    for g in np.flatnonzero(by_anc):
+        name = db.frames[g].pretty()
+        area[name] = area.get(name, 0.0) + by_anc[g]
+    total = sum(area.values())
+    rows = sorted(area.items(), key=lambda kv: -kv[1])[:top]
+    return [(n, v / total if total else 0.0) for n, v in rows]
+
+
+def top_kernels(lines: Sequence[TraceData], db, *, t0: int, t1: int,
+                k: int = 5) -> List[Tuple[str, float]]:
+    """Top-k GPU contexts by busy ns inside the window (GPU lines only)."""
+    gpu = [td for td in lines if td.identity.get("type") == "gpu"]
+    prof = interval_profile(gpu, len(db.frames), t0, t1)
+    order = np.argsort(-prof, kind="stable")[:k]
+    return [(db.frames[g].pretty(), float(prof[g]))
+            for g in order if prof[g] > 0]
+
+
+# --------------------------------------------------------------------------
+# Idleness / blame over time
+# --------------------------------------------------------------------------
+def _clip_line(td: TraceData, t0: int, t1: int) -> TraceData:
+    starts = np.asarray(td.starts, np.int64)
+    ends = np.asarray(td.ends, np.int64)
+    sel = (starts < t1) & (ends > t0)
+    return TraceData(td.identity, np.clip(starts[sel], t0, t1),
+                     np.clip(ends[sel], t0, t1),
+                     np.asarray(td.ctx, np.int64)[sel])
+
+
+def split_by_rank(lines: Sequence[TraceData]
+                  ) -> Dict[int, List[TraceData]]:
+    by_rank: Dict[int, List[TraceData]] = {}
+    for td in lines:
+        by_rank.setdefault(int(td.identity.get("rank", 0)), []).append(td)
+    return by_rank
+
+
+def blame_over_time(lines: Sequence[TraceData], t0: int, t1: int,
+                    nbins: int) -> Dict[int, dict]:
+    """Per rank: ``streams_idle_frac`` (nbins,) — 1 - mean busy fraction
+    of the rank's GPU streams per bin; ``idle_ns`` (nbins,) — all-streams
+    -idle time per bin; ``blame`` {cpu ctx: (nbins,) ns} — idle time split
+    equally across CPU contexts active during it, prorated onto the bins
+    each idle segment spans.  Summing ``blame`` over bins reproduces
+    ``core.blame.blame_gpu_idleness`` on the same (clipped) lines.
+    Ranks with no GPU lines are omitted (no streams to be idle).
+    """
+    edges = t0 + (t1 - t0) * np.arange(nbins + 1, dtype=np.int64) // nbins
+    out: Dict[int, dict] = {}
+    for rank, rlines in sorted(split_by_rank(lines).items()):
+        cpu = [_clip_line(td, t0, t1) for td in rlines
+               if td.identity.get("type", "cpu") == "cpu"]
+        gpu = [_clip_line(td, t0, t1) for td in rlines
+               if td.identity.get("type") == "gpu"]
+        if not gpu:
+            # no streams -> "fraction of streams idle" is undefined, and
+            # blaming the rank's whole CPU runtime would be wrong
+            continue
+        busy = occupancy(gpu, t0, t1, nbins)
+        widths = np.diff(edges).astype(np.float64)
+        frac = 1.0 - busy.sum(0) / np.maximum(widths * max(len(gpu), 1), 1)
+        idle_ns = np.zeros(nbins)
+        blame: Dict[int, np.ndarray] = {}
+        for seg_t0, seg_t1, active in idle_segments(cpu, gpu):
+            lo = int(np.searchsorted(edges, seg_t0, side="right")) - 1
+            hi = int(np.searchsorted(edges, seg_t1, side="left"))
+            for b in range(max(lo, 0), min(hi, nbins)):
+                part = min(seg_t1, int(edges[b + 1])) \
+                    - max(seg_t0, int(edges[b]))
+                if part <= 0:
+                    continue
+                idle_ns[b] += part
+                share = part / len(active)
+                for c in active:
+                    blame.setdefault(
+                        c, np.zeros(nbins))[b] += share
+        out[rank] = {"streams_idle_frac": frac, "idle_ns": idle_ns,
+                     "blame": blame}
+    return out
+
+
+def windowed_blame(lines: Sequence[TraceData], t0: int, t1: int
+                   ) -> Tuple[Dict[int, float], float]:
+    """Exact §7.2 blame restricted to a window: clip every line to
+    [t0, t1) and delegate to ``core.blame.blame_gpu_idleness``."""
+    cpu = [_clip_line(td, t0, t1) for td in lines
+           if td.identity.get("type", "cpu") == "cpu"]
+    gpu = [_clip_line(td, t0, t1) for td in lines
+           if td.identity.get("type") == "gpu"]
+    return blame_gpu_idleness(cpu, gpu)

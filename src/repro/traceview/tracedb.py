@@ -1,0 +1,166 @@
+"""Merged trace database — the ``trace.db`` analogue (paper §4.4, §6.1;
+"Preparing for Performance Analysis at Exascale" motivates the format).
+
+``hpcprof`` merges N per-rank/per-stream trace files into *one* seekable
+database so post-mortem tools never re-open thousands of small files and
+never re-sort events.  We do the same:
+
+- one header (JSON, canonical encoding) with an **identity index**: every
+  trace line's identity dict plus its (element offset, event count) into
+  the data region;
+- one int64 data region holding, per line, the three columns
+  ``starts | ends | ctx`` contiguously, with starts **sorted at merge
+  time** (the writer's out-of-order flag is consumed exactly once, here,
+  instead of by every reader — §4.4);
+- the data region is 64-byte aligned and read back with ``np.memmap``, so
+  opening a multi-GB database touches only the header and each view is a
+  zero-copy slice.
+
+Merging is idempotent: rebuilding a database from an existing ``trace.db``
+produces byte-identical output (canonical line order + canonical JSON),
+which tests/test_traceview.py locks in.
+
+Layout::
+
+    MAGIC "RTDB" | u32 version | u64 header_len | header JSON | pad to 64
+    int64 data[]   (per line: count starts, count ends, count ctx)
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+import struct
+from typing import Iterable, List, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.trace import TraceData, read_trace, sorted_by_start
+
+MAGIC = b"RTDB"
+VERSION = 1
+_ALIGN = 64
+_HDR = struct.Struct("<4sIQ")    # magic, version, header json length
+
+
+def _line_key(identity: dict) -> tuple:
+    """Canonical line order: host, rank, CPU threads before GPU streams,
+    then thread/stream index (hpctraceviewer's process.thread ordering)."""
+    return (str(identity.get("host", "")),
+            int(identity.get("rank", 0)),
+            0 if identity.get("type", "cpu") == "cpu" else 1,
+            int(identity.get("thread", identity.get("stream", 0)) or 0),
+            json.dumps(identity, sort_keys=True))
+
+
+def _load_sources(sources: Union[str, Sequence[str]]) -> List[TraceData]:
+    """Expand sources into trace lines.  A source is a measurement
+    directory (all ``*.rtrc`` inside), a single ``.rtrc`` file, or an
+    existing ``trace.db`` (whose lines re-merge unchanged)."""
+    if isinstance(sources, str):
+        sources = [sources]
+    lines: List[TraceData] = []
+    for src in sources:
+        if os.path.isdir(src):
+            for p in sorted(glob.glob(os.path.join(src, "*.rtrc"))):
+                lines.append(read_trace(p))
+        elif src.endswith(".rtrc"):
+            lines.append(read_trace(src))
+        else:
+            # materialize: line_views are zero-copy views into the mapped
+            # file, which build_db may be about to overwrite in place
+            lines.extend(TraceData(td.identity, np.array(td.starts),
+                                   np.array(td.ends), np.array(td.ctx))
+                         for td in TraceDB(src).line_views())
+    return lines
+
+
+def build_db(sources: Union[str, Sequence[str]], out_path: str) -> "TraceDB":
+    """Merge per-identity trace files into one seekable ``trace.db``."""
+    lines = [sorted_by_start(td) for td in _load_sources(sources)]
+    lines.sort(key=lambda td: _line_key(td.identity))
+    index = []
+    offset = 0
+    for td in lines:
+        n = len(td.starts)
+        index.append({"identity": td.identity, "offset": offset, "count": n})
+        offset += 3 * n
+    t_min = min((int(td.starts[0]) for td in lines if len(td.starts)),
+                default=0)
+    t_max = max((int(td.ends.max()) for td in lines if len(td.ends)),
+                default=0)
+    header = json.dumps(
+        {"version": VERSION, "n_events": offset // 3,
+         "t_min": t_min, "t_max": t_max, "lines": index},
+        sort_keys=True, separators=(",", ":")).encode()
+    tmp_path = out_path + ".tmp"
+    with open(tmp_path, "wb") as f:
+        f.write(_HDR.pack(MAGIC, VERSION, len(header)))
+        f.write(header)
+        pos = _HDR.size + len(header)
+        f.write(b"\0" * (-pos % _ALIGN))
+        for td in lines:
+            f.write(td.starts.astype("<i8").tobytes())
+            f.write(td.ends.astype("<i8").tobytes())
+            f.write(td.ctx.astype("<i8").tobytes())
+    os.replace(tmp_path, out_path)   # atomic; safe for in-place re-merge
+    return TraceDB(out_path)
+
+
+@dataclasses.dataclass
+class TraceLine:
+    identity: dict
+    offset: int       # element offset into the data region
+    count: int
+
+
+class TraceDB:
+    """Memory-mapped reader.  ``starts/ends/ctx(i)`` are zero-copy slices
+    of the mapped data region; ``view(i)`` wraps them as the same
+    ``TraceData`` the pre-merge tools (blame, viewer) consume."""
+
+    def __init__(self, path: str):
+        self.path = path
+        with open(path, "rb") as f:
+            magic, version, hdr_len = _HDR.unpack(f.read(_HDR.size))
+            if magic != MAGIC:
+                raise ValueError(f"{path}: not a trace.db (bad magic)")
+            if version != VERSION:
+                raise ValueError(f"{path}: unsupported version {version}")
+            hdr = json.loads(f.read(hdr_len))
+        data_offset = (_HDR.size + hdr_len + _ALIGN - 1) // _ALIGN * _ALIGN
+        self.t_min: int = hdr["t_min"]
+        self.t_max: int = hdr["t_max"]
+        self.n_events: int = hdr["n_events"]
+        self.lines: List[TraceLine] = [
+            TraceLine(ln["identity"], ln["offset"], ln["count"])
+            for ln in hdr["lines"]]
+        self._data = np.memmap(path, np.int64, mode="r", offset=data_offset,
+                               shape=(3 * self.n_events,)) \
+            if self.n_events else np.zeros(0, np.int64)
+
+    def __len__(self) -> int:
+        return len(self.lines)
+
+    def starts(self, i: int) -> np.ndarray:
+        ln = self.lines[i]
+        return self._data[ln.offset:ln.offset + ln.count]
+
+    def ends(self, i: int) -> np.ndarray:
+        ln = self.lines[i]
+        return self._data[ln.offset + ln.count:ln.offset + 2 * ln.count]
+
+    def ctx(self, i: int) -> np.ndarray:
+        ln = self.lines[i]
+        return self._data[ln.offset + 2 * ln.count:ln.offset + 3 * ln.count]
+
+    def view(self, i: int) -> TraceData:
+        return TraceData(self.lines[i].identity, self.starts(i),
+                         self.ends(i), self.ctx(i))
+
+    def line_views(self) -> List[TraceData]:
+        return [self.view(i) for i in range(len(self.lines))]
+
+    def time_range(self) -> Tuple[int, int]:
+        return self.t_min, self.t_max

@@ -1,0 +1,348 @@
+"""Traceview subsystem (paper §4.4, §7): merged trace.db, depth×time
+raster, interval statistics, filters — plus the TraceWriter interleaved
+append regression the merge depends on."""
+import os
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core.blame import blame_gpu_idleness
+from repro.core.cct import Frame
+from repro.core.trace import TraceData, TraceWriter, read_trace
+from repro.traceview import (TraceDB, TraceFilter, apply_filter,
+                             blame_over_time, build_db, interval_profile,
+                             merge_intervals, occupancy, rasterize, render,
+                             subtree_mask, summary, top_kernels,
+                             windowed_blame)
+
+
+# ---------------------------------------------------------------------------
+# TraceWriter: interleaved append / append_many (ISSUE 2 satellite)
+# ---------------------------------------------------------------------------
+SCENARIOS = {
+    # chunk then a scalar append earlier than the chunk's LAST start: the
+    # writer must compare against the chunk tail, not a stale last-start
+    "many_then_earlier_append": ([("many", [10, 20, 30]), ("one", 15)], True),
+    "many_then_later_append": ([("many", [10, 20, 30]), ("one", 30)], False),
+    "append_then_earlier_many": ([("one", 50), ("many", [40, 60])], True),
+    "append_then_later_many": ([("one", 50), ("many", [50, 60])], False),
+    "unsorted_chunk": ([("many", [10, 5, 30])], True),
+    "many_many_boundary": ([("many", [10, 20]), ("many", [15, 30])], True),
+    "in_order_interleave": ([("many", [10, 20]), ("one", 30),
+                             ("many", [40]), ("one", 50)], False),
+}
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_tracewriter_interleaved_append_apis(tmp_path, name):
+    ops, want_ooo = SCENARIOS[name]
+    mixed = TraceWriter(str(tmp_path / "mixed.rtrc"), {"rank": 0})
+    pure = TraceWriter(str(tmp_path / "pure.rtrc"), {"rank": 0})
+    flat = []
+    for kind, v in ops:
+        if kind == "many":
+            mixed.append_many(v, [x + 1 for x in v], [7] * len(v))
+            flat.extend(v)
+        else:
+            mixed.append(v, v + 1, 7)
+            flat.append(v)
+    for s in flat:
+        pure.append(s, s + 1, 7)
+    assert mixed.out_of_order == want_ooo
+    assert pure.out_of_order == want_ooo
+    mixed.close()
+    pure.close()
+    # byte-identical to the equivalent pure-append sequence
+    assert open(mixed.path, "rb").read() == open(pure.path, "rb").read()
+    td = read_trace(mixed.path)
+    assert list(td.starts) == sorted(flat)   # reader sorts when flagged
+
+
+# ---------------------------------------------------------------------------
+# fixtures: a small deterministic tree + traces
+# ---------------------------------------------------------------------------
+class SynthDB:
+    def __init__(self, frames, parents):
+        self.frames = frames
+        self.parents = parents
+
+
+@pytest.fixture
+def tiny():
+    frames = [Frame("root", "<program root>"),
+              Frame("host", "main", "app.py", 1),
+              Frame("host", "step", "app.py", 10),
+              Frame("placeholder", "kernel:train", "0", 0),
+              Frame("host", "other", "app.py", 20)]
+    parents = np.array([-1, 0, 1, 2, 1])
+    cpu = TraceData({"rank": 0, "thread": 0, "type": "cpu"},
+                    np.array([0, 50, 80]), np.array([50, 80, 100]),
+                    np.array([2, 4, 2]))
+    gpu = TraceData({"rank": 0, "stream": 0, "type": "gpu"},
+                    np.array([10, 60]), np.array([40, 70]),
+                    np.array([3, 3]))
+    return SynthDB(frames, parents), [cpu, gpu]
+
+
+def write_lines(tmp_path, lines):
+    paths = []
+    for td in lines:
+        ident = td.identity
+        tag = f"r{ident['rank']}_" + (f"t{ident.get('thread', 0)}"
+                                      if ident["type"] == "cpu"
+                                      else f"s{ident.get('stream', 0)}")
+        tw = TraceWriter(str(tmp_path / f"trace_{tag}.rtrc"), ident)
+        tw.append_many(td.starts, td.ends, td.ctx)
+        tw.close()
+        paths.append(tw.path)
+    return paths
+
+
+# ---------------------------------------------------------------------------
+# trace.db: merge, identity index, mmap reads, idempotence
+# ---------------------------------------------------------------------------
+def test_tracedb_roundtrip(tmp_path, tiny):
+    db, lines = tiny
+    write_lines(tmp_path, lines)
+    tdb = build_db(str(tmp_path), str(tmp_path / "trace.db"))
+    assert len(tdb) == 2 and tdb.n_events == 5
+    assert tdb.time_range() == (0, 100)
+    # CPU threads order before GPU streams
+    assert tdb.lines[0].identity["type"] == "cpu"
+    v = tdb.view(0)
+    np.testing.assert_array_equal(v.starts, [0, 50, 80])
+    np.testing.assert_array_equal(v.ends, [50, 80, 100])
+    np.testing.assert_array_equal(v.ctx, [2, 4, 2])
+
+
+def test_tracedb_sorts_out_of_order_once(tmp_path):
+    tw = TraceWriter(str(tmp_path / "a.rtrc"), {"rank": 0, "type": "gpu",
+                                                "stream": 0})
+    tw.append_many([30, 10, 20], [35, 15, 25], [1, 2, 3])
+    tw.close()
+    assert tw.out_of_order
+    tdb = build_db([tw.path], str(tmp_path / "trace.db"))
+    np.testing.assert_array_equal(tdb.starts(0), [10, 20, 30])
+    np.testing.assert_array_equal(tdb.ctx(0), [2, 3, 1])
+
+
+def test_tracedb_merge_idempotent(tmp_path, tiny):
+    _, lines = tiny
+    paths = write_lines(tmp_path, lines)
+    db1 = build_db(paths, str(tmp_path / "one.db"))
+    db2 = build_db(db1.path, str(tmp_path / "two.db"))
+    assert open(db1.path, "rb").read() == open(db2.path, "rb").read()
+    # and merging a mix of db + raw files keeps every line exactly once
+    db3 = build_db([db1.path], str(tmp_path / "three.db"))
+    assert db3.n_events == db1.n_events
+    # in-place re-merge (output == input) must not read truncated pages
+    before = open(db1.path, "rb").read()
+    build_db(db1.path, db1.path)
+    assert open(db1.path, "rb").read() == before
+
+
+def test_tracedb_empty(tmp_path):
+    tdb = build_db([], str(tmp_path / "empty.db"))
+    assert len(tdb) == 0 and tdb.n_events == 0
+    again = TraceDB(tdb.path)
+    assert len(again) == 0
+
+
+# ---------------------------------------------------------------------------
+# raster + render: golden text at two zoom levels
+# ---------------------------------------------------------------------------
+GOLDEN_FULL = """\
+TRACEVIEW  [0, 100)  span=100ns  depth=2  2x20
+r0.t0 |aaaaaaaaaabbbbbbaaaa|
+r0.s0 |..aaaaaa....aa......|
+legend:
+  a  78.6%  step @ app.py:10
+  b  21.4%  other @ app.py:20"""
+
+GOLDEN_ZOOM = """\
+TRACEVIEW  [40, 80)  span=40ns  depth=3  2x20
+r0.t0 |bbbbbaaaaaaaaaaaaaaa|
+r0.s0 |..........ccccc.....|
+legend:
+  a  60.0%  other @ app.py:20
+  b  20.0%  step @ app.py:10
+  c  20.0%  <gpu op kernel:train>"""
+
+
+def test_raster_golden_two_zooms(tiny):
+    db, lines = tiny
+    full = render(rasterize(lines, db.parents, width=20, depth=2), db)
+    assert full == GOLDEN_FULL
+    zoom = render(rasterize(lines, db.parents, t0=40, t1=80, width=20,
+                            depth=3), db)
+    assert zoom == GOLDEN_ZOOM
+
+
+def test_raster_nested_events_show_enclosing(tiny):
+    """After a nested event ends, the enclosing event shows through —
+    what nested cpu_region calls produce."""
+    db, _ = tiny
+    line = TraceData({"rank": 0, "thread": 0, "type": "cpu"},
+                     np.array([0, 20, 50, 55]), np.array([100, 40, 70, 60]),
+                     np.array([1, 2, 2, 4]))
+    r = rasterize([line], db.parents, t0=0, t1=100, width=10, depth=3)
+    # samples at 5,15: outer ctx1; 25,35: nested ctx2; 45: back to ctx1;
+    # 55: ctx4 (innermost of three open); 65: ctx2; 75..95: ctx1 again
+    assert r.pixels[0].tolist() == [1, 1, 2, 2, 1, 4, 2, 1, 1, 1]
+
+
+def test_raster_height_budget(tiny):
+    db, (cpu, gpu) = tiny
+    many = [TraceData({**cpu.identity, "thread": i}, cpu.starts, cpu.ends,
+                      cpu.ctx) for i in range(10)]
+    r = rasterize(many, db.parents, width=8, height=4, depth=1)
+    assert r.pixels.shape[0] <= 4
+    assert len(r.labels) == r.pixels.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# interval statistics
+# ---------------------------------------------------------------------------
+def test_summary_matches_trace_statistic(tmp_path):
+    from repro.core import viewer
+    from repro.core.aggregate import aggregate
+    from tests.test_aggregate import write_rank_profiles
+    paths, _ = write_rank_profiles(tmp_path)
+    traces = [p.replace(".rpro", ".rtrc") for p in paths]
+    out = str(tmp_path / "db")
+    db = aggregate(paths, out, n_ranks=1, n_threads=1, trace_paths=traces)
+    tds = [read_trace(os.path.join(out, os.path.basename(t)))
+           for t in traces]
+    for depth in (1, 2):
+        ref = dict(viewer.trace_statistic(tds, db, depth=depth, top=10**9))
+        got = dict(summary(tds, db, depth=depth, top=10**9))
+        assert got == pytest.approx(ref)
+
+
+def test_summary_groups_same_routine_across_contexts():
+    """One function reached via two call paths is one Summary row, like
+    trace_statistic."""
+    frames = [Frame("root", "<program root>"),
+              Frame("host", "a", "app.py", 1), Frame("host", "b", "app.py", 2),
+              Frame("host", "work", "app.py", 5),
+              Frame("host", "work", "app.py", 5)]
+    db = SynthDB(frames, np.array([-1, 0, 0, 1, 2]))
+    line = TraceData({"rank": 0, "thread": 0, "type": "cpu"},
+                     np.array([0, 20]), np.array([20, 40]), np.array([3, 4]))
+    rows = summary([line], db, depth=2, top=1)
+    assert rows == [("work @ app.py:5", 1.0)]
+
+
+def test_aggregate_writes_trace_db(tmp_path):
+    from repro.core.aggregate import aggregate
+    from tests.test_aggregate import write_rank_profiles
+    paths, _ = write_rank_profiles(tmp_path)
+    traces = [p.replace(".rpro", ".rtrc") for p in paths]
+    db = aggregate(paths, str(tmp_path / "db"), n_ranks=1, n_threads=1,
+                   trace_paths=traces)
+    tdb = TraceDB(db.trace_db_path())
+    assert len(tdb) == len(traces)
+    # merged ctx ids are global: renderable against the Database
+    r = rasterize(tdb.line_views(), db.parents, width=16, depth=1)
+    assert (r.pixels >= -1).all() and (r.pixels < len(db.frames)).all()
+
+
+def test_interval_profile_window(tiny):
+    db, lines = tiny
+    prof = interval_profile(lines, len(db.frames), 40, 80)
+    # cpu: ctx2 overlaps [40,50)=10, ctx4 [50,80)=30; gpu ctx3 [60,70)=10
+    assert prof[2] == 10 and prof[4] == 30 and prof[3] == 10
+
+
+def test_top_kernels(tiny):
+    db, lines = tiny
+    rows = top_kernels(lines, db, t0=0, t1=100, k=2)
+    assert rows == [("<gpu op kernel:train>", 40.0)]
+
+
+def test_blame_over_time_matches_core_blame(tiny):
+    db, lines = tiny
+    bot = blame_over_time(lines, 0, 100, 7)
+    ref_blame, ref_idle = blame_gpu_idleness([lines[0]], [lines[1]])
+    got = bot[0]
+    assert got["idle_ns"].sum() == pytest.approx(ref_idle)
+    assert {c: v.sum() for c, v in got["blame"].items()} \
+        == pytest.approx(ref_blame)
+    w_blame, w_idle = windowed_blame(lines, 0, 100)
+    assert w_idle == pytest.approx(ref_idle)
+    assert w_blame == pytest.approx(ref_blame)
+
+
+def test_merge_intervals():
+    s, e = merge_intervals([0, 5, 20, 10], [7, 6, 30, 20])
+    np.testing.assert_array_equal(s, [0, 10])
+    np.testing.assert_array_equal(e, [7, 30])
+
+
+@given(st.lists(st.tuples(st.integers(0, 500), st.integers(1, 40)),
+                min_size=1, max_size=30),
+       st.integers(1, 13))
+@settings(max_examples=60, deadline=None)
+def test_occupancy_sums_to_window(events, nbins):
+    """Per line: busy-per-bin sums to total busy, and busy + idle equals
+    the window length — for any events and any binning."""
+    starts = np.sort(np.array([s for s, _ in events]))
+    durs = np.array([d for _, d in events])
+    ends = starts + durs
+    td = TraceData({"rank": 0, "type": "gpu", "stream": 0}, starts, ends,
+                   np.ones(len(starts), np.int64))
+    t0, t1 = 0, int(ends.max()) + 7
+    busy = occupancy([td], t0, t1, nbins)
+    m_s, m_e = merge_intervals(starts, ends)
+    total_busy = int((m_e - m_s).sum())
+    assert busy.shape == (1, nbins)
+    assert busy.sum() == pytest.approx(total_busy)
+    idle = (t1 - t0) - busy.sum()
+    assert idle == pytest.approx(t1 - t0 - total_busy)
+    assert 0 <= idle <= t1 - t0
+
+
+# ---------------------------------------------------------------------------
+# filters
+# ---------------------------------------------------------------------------
+def test_filter_identity_and_window(tiny):
+    db, lines = tiny
+    assert [td.identity["type"]
+            for td in apply_filter(lines, TraceFilter(types={"gpu"}))] \
+        == ["gpu"]
+    assert apply_filter(lines, TraceFilter(ranks={3})) == []
+    cut = apply_filter(lines, TraceFilter(t0=55, t1=75))
+    assert len(cut[0].starts) == 1          # cpu: only the [50,80) event
+    np.testing.assert_array_equal(cut[1].starts, [60])
+
+
+def test_filter_subtree(tiny):
+    db, lines = tiny
+    mask = subtree_mask(db.parents, 2)
+    np.testing.assert_array_equal(mask, [False, False, True, True, False])
+    cut = apply_filter(lines, TraceFilter(subtree=2), db.parents)
+    np.testing.assert_array_equal(cut[0].ctx, [2, 2])   # ctx4 dropped
+    np.testing.assert_array_equal(cut[1].ctx, [3, 3])
+    with pytest.raises(ValueError):
+        apply_filter(lines, TraceFilter(subtree=2))
+
+
+# ---------------------------------------------------------------------------
+# profiler wiring
+# ---------------------------------------------------------------------------
+def test_profiler_build_trace_db(tmp_path):
+    import itertools
+    from repro.core.profiler import Profiler
+    ticks = itertools.count(0, 1000)
+    prof = Profiler(str(tmp_path / "m"), tracing=True, unwind=False,
+                    clock=lambda: next(ticks))
+    with prof:
+        with prof.dispatch("kernel", "k", stream=0, duration_ns=5000):
+            pass
+        with prof.cpu_region("prep"):
+            pass
+    prof.write()
+    tdb = TraceDB(prof.build_trace_db())
+    assert len(tdb) >= 2                     # cpu thread + gpu stream
+    assert tdb.n_events >= 3
