@@ -1,0 +1,113 @@
+"""Hardware-counter subsystem throughput (paper §6; repro.counters).
+
+Two stages the subsystem must keep fast, each with an explicit budget
+(enforced by benchmarks/run.py, tracked in BENCH_counters.json):
+
+- **schedule**: packing requested counter sets into compatible multiplex
+  groups.  Scheduling happens once per ``enable_counters`` call, but the
+  tool-facing contract is that it is never a bottleneck even when a
+  driver re-plans per kernel family — budget: >= 20k schedules/s.
+- **merge**: aggregating profiles whose CCT nodes carry the dense
+  12-column ``gpu_counter`` kind, i.e. the counter contribution to
+  phase-4 statistic generation.  Counter kinds ride the standard sparse
+  path; the run asserts the 4-rank merge is bitwise deterministic
+  (stats equal across two aggregations) and holds a wall-clock budget.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.aggregate import aggregate
+from repro.core.cct import CCT, Frame, HOST, PLACEHOLDER
+from repro.core.metrics import GPU_COUNTER_METRICS, default_registry
+from repro.core.profmt import write_profile
+from repro.counters import ALL_COUNTERS, build_schedule, optimal_passes
+
+SCHEDULE_BUDGET_PER_S = 20_000     # schedules/sec
+MERGE_BUDGET_S = 8.0               # 16-profile x 2k-kernel counter merge
+MERGE_BUDGET_S_SMALL = 4.0
+
+
+def bench_schedule(n: int) -> dict:
+    # every non-empty prefix + suffix of the catalog, cycled — exercises
+    # 1..N-counter requests and multi-group packing
+    requests = [ALL_COUNTERS[:k] for k in range(1, len(ALL_COUNTERS) + 1)]
+    requests += [ALL_COUNTERS[k:] for k in range(len(ALL_COUNTERS) - 1)]
+    it = itertools.cycle(requests)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        build_schedule(next(it))
+    dt = time.perf_counter() - t0
+    # correctness spot check rides along: first-fit meets the bound
+    for req in requests:
+        assert len(build_schedule(req).groups) <= optimal_passes(req)
+    return {"n_schedules": n, "schedule_s": dt,
+            "schedules_per_s": n / dt,
+            "schedule_under_budget": bool(n / dt >= SCHEDULE_BUDGET_PER_S),
+            "schedule_budget_per_s": SCHEDULE_BUDGET_PER_S}
+
+
+def synth_counter_profiles(tmp: str, n_profiles: int, n_kernels: int):
+    """Profiles whose placeholders carry dense gpu_counter vectors."""
+    reg = default_registry()
+    ckind = reg.kind("gpu_counter")
+    kkind = reg.kind("gpu_kernel")
+    rng = np.random.default_rng(3)
+    base = rng.uniform(1.0, 1e9, (n_kernels, len(GPU_COUNTER_METRICS)))
+    paths = []
+    for r in range(n_profiles):
+        cct = CCT()
+        main = cct.insert_path([Frame(HOST, "main", "app.py", 1)])
+        for k in range(n_kernels):
+            step = cct.insert_path(
+                [Frame(HOST, f"step{k % 37}", "app.py", 10 + k % 37)],
+                parent=main)
+            ph = cct.get_or_insert(
+                step, Frame(PLACEHOLDER, f"kernel:k{k}", "0", 0))
+            ph.metrics.add(kkind, "invocations", 1)
+            ph.metrics.add(kkind, "time_ns", 100.0 + k)
+            ph.metrics.add_vec(ckind, base[k] * (r + 1))
+        p = os.path.join(tmp, f"profile_r{r}_t0.rpro")
+        write_profile(p, cct, reg, {"rank": r, "thread": 0, "type": "cpu"},
+                      [])
+        paths.append(p)
+    return paths
+
+
+def bench_merge(n_profiles: int, n_kernels: int, budget_s: float) -> dict:
+    tmp = tempfile.mkdtemp(prefix="repro_counters_bench_")
+    paths = synth_counter_profiles(tmp, n_profiles, n_kernels)
+    t0 = time.perf_counter()
+    db = aggregate(paths, os.path.join(tmp, "db"), n_ranks=4, n_threads=4)
+    merge_s = time.perf_counter() - t0
+    db2 = aggregate(paths, os.path.join(tmp, "db2"), n_ranks=4, n_threads=4)
+    deterministic = all(
+        np.array_equal(db.stats[s], db2.stats[s]) for s in db.stats)
+    n_values = n_profiles * n_kernels * len(GPU_COUNTER_METRICS)
+    return {"n_profiles": n_profiles, "n_kernels": n_kernels,
+            "counter_values": n_values,
+            "merge_s": merge_s,
+            "counter_values_per_s": n_values / merge_s,
+            "merge_deterministic": bool(deterministic),
+            "merge_under_budget": bool(merge_s < budget_s),
+            "merge_budget_s": budget_s}
+
+
+def main(small: bool = False):
+    r = bench_schedule(2_000 if small else 20_000)
+    r.update(bench_merge(
+        8 if small else 16, 500 if small else 2_000,
+        MERGE_BUDGET_S_SMALL if small else MERGE_BUDGET_S))
+    assert r["merge_deterministic"], "counter merge must be bitwise stable"
+    for k, v in r.items():
+        print(f"bench_counters,{k},{v}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

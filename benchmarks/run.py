@@ -16,9 +16,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_aggregation, bench_channels, bench_overhead,
-                        bench_reconstruction, bench_roofline, bench_sparse,
-                        bench_traceview)
+from benchmarks import (bench_aggregation, bench_channels, bench_counters,
+                        bench_overhead, bench_reconstruction, bench_roofline,
+                        bench_sparse, bench_traceview)
 
 ALL = {
     "channels": bench_channels,        # §4.1 wait-free channels
@@ -28,10 +28,26 @@ ALL = {
     "overhead": bench_overhead,        # §8.1 measurement overhead
     "roofline": bench_roofline,        # deliverable (g)
     "traceview": bench_traceview,      # §4.4/§7 trace.db merge + raster
+    "counters": bench_counters,        # §6 counter schedule + merge
 }
 
 # benchmarks whose results are persisted as BENCH_<name>.json
-TRACKED = ("aggregation", "channels", "traceview")
+TRACKED = ("aggregation", "channels", "traceview", "counters")
+
+
+def budget_regressions(name: str, results: dict) -> list:
+    """Budget contract: a benchmark that tracks a budget reports a
+    ``<stage>_under_budget`` bool (with its ``<stage>_budget_*`` bound
+    riding along).  Any False is a perf regression the sweep must fail
+    loudly on, naming the benchmark and stage."""
+    out = []
+    for key, ok in results.items():
+        if key.endswith("_under_budget") and not ok:
+            stage = key[: -len("_under_budget")]
+            bound = {k: v for k, v in results.items()
+                     if k.startswith(stage + "_budget")}
+            out.append(f"{name}: {stage} exceeded its budget {bound}")
+    return out
 
 
 def main(argv=None):
@@ -43,6 +59,7 @@ def main(argv=None):
                     help="where BENCH_<name>.json files land")
     args = ap.parse_args(argv)
     failures = 0
+    regressions = []
     for name, mod in ALL.items():
         if args.only and name != args.only:
             continue
@@ -56,6 +73,8 @@ def main(argv=None):
                 print(f"# note: {name} has no --small mode; "
                       "running full size", flush=True)
             results = mod.main(**kwargs)
+            if isinstance(results, dict):
+                regressions += budget_regressions(name, results)
             if name in TRACKED and isinstance(results, dict):
                 os.makedirs(args.json_dir, exist_ok=True)
                 path = os.path.join(args.json_dir, f"BENCH_{name}.json")
@@ -69,7 +88,9 @@ def main(argv=None):
             failures += 1
             traceback.print_exc()
         print(f"# {name} took {time.perf_counter() - t0:.1f}s", flush=True)
-    return failures
+    for msg in regressions:
+        print(f"# BUDGET REGRESSION: {msg}", file=sys.stderr, flush=True)
+    return failures + len(regressions)
 
 
 if __name__ == "__main__":

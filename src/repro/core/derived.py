@@ -122,3 +122,30 @@ REGISTERS_USED = DerivedMetric(
 GPU_UTILIZATION = DerivedMetric(
     "gpu_utilization",
     "gpu_kernel__time_ns / (cpu__time_ns + gpu_kernel__time_ns)")
+
+# ---------------------------------------------------------------------------
+# Hardware-counter derived metrics (paper §6; repro.counters).  All are
+# ratios of gpu_counter columns, so the zero-division policy (0) makes
+# them vanish at contexts with no counter data.
+# ---------------------------------------------------------------------------
+from repro.core.sampling import PEAK_FLOPS as _PEAK_FLOPS  # noqa: E402
+
+# modeled busy time over elapsed time, clamped into [0, 1]
+ACHIEVED_OCCUPANCY = DerivedMetric(
+    "achieved_occupancy",
+    "min(gpu_counter__active_ns / gpu_counter__elapsed_ns, 1.0)")
+# fraction of the chip's peak FLOP/s actually achieved
+FLOP_EFFICIENCY = DerivedMetric(
+    "flop_efficiency",
+    f"gpu_counter__flops / (gpu_counter__elapsed_ns * {_PEAK_FLOPS * 1e-9})")
+# arithmetic-intensity inverse: memory traffic per flop
+BYTES_PER_FLOP = DerivedMetric(
+    "bytes_per_flop",
+    "gpu_counter__hbm_bytes / gpu_counter__flops")
+# mean measurement passes per kernel launch (1 unless replay-multiplexed)
+REPLAY_PASS_COUNT = DerivedMetric(
+    "replay_pass_count",
+    "gpu_counter__replay_passes / gpu_kernel__invocations")
+
+COUNTER_DERIVED = (ACHIEVED_OCCUPANCY, FLOP_EFFICIENCY, BYTES_PER_FLOP,
+                   REPLAY_PASS_COUNT)

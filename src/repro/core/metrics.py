@@ -54,6 +54,25 @@ class MetricRegistry:
         return len(self.metric_names)
 
 
+# Kernel-granularity hardware-counter kind (paper §6 "supplement
+# fine-grained measurements with hardware performance counters").  The
+# member layout is owned here so every profile agrees on the columns; the
+# counter *taxonomy* (domains, units, multiplex capacities) lives in
+# repro.counters.taxonomy and validates itself against this tuple.
+GPU_COUNTER_KIND = "gpu_counter"
+GPU_COUNTER_METRICS = (
+    # compute domain
+    "flops", "mxu_flops", "transcendental_ops",
+    # memory domain
+    "hbm_read_bytes", "hbm_write_bytes", "hbm_bytes",
+    # collective domain
+    "ici_wire_bytes", "collective_invocations",
+    # scheduler domain
+    "inst_executed", "active_ns",
+    # tool domain (always collected, never multiplexed)
+    "elapsed_ns", "replay_passes",
+)
+
 # The default registry mirrors the paper's examples (§4.5, §4.6, §7.1).
 DEFAULT_KINDS = (
     ("cpu", ("time_ns", "samples")),
@@ -65,6 +84,8 @@ DEFAULT_KINDS = (
     # fine-grained (PC-sampling analogue) metrics per GPU "instruction"
     ("gpu_inst", ("samples", "stall_compute", "stall_memory",
                   "stall_collective", "flops", "bytes")),
+    # kernel-granularity hardware counters (repro.counters)
+    (GPU_COUNTER_KIND, GPU_COUNTER_METRICS),
 )
 
 

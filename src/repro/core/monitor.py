@@ -88,7 +88,8 @@ class MonitorThread:
         self._trace_channels: Dict[int, SpscQueue] = {}
         self._trace_threads: List[TracingThread] = []
         self._n_tracing = max(1, n_tracing_threads)
-        self.stats = {"ops": 0, "activities": 0, "routed": 0}
+        self.stats = {"ops": 0, "activities": 0, "routed": 0,
+                      "counter_records": 0}
         self.trace_sink: Optional[Callable] = None   # (stream, A, P) -> None
 
     # -- lifecycle ----------------------------------------------------------
@@ -171,6 +172,8 @@ class MonitorThread:
                 elif tag == ACTIVITY:
                     _, act = rec
                     self.stats["activities"] += 1
+                    if act.meta is not None and "counters" in act.meta:
+                        self.stats["counter_records"] += 1
                     entry = self._pending_ops.pop(act.corr_id, None)
                     if entry is None:
                         continue

@@ -71,6 +71,8 @@ class Profiler:
         self._threads_lock = threading.Lock()
         self._modules: Dict[int, HloModule] = {}
         self._module_names: Dict[int, str] = {}
+        self._module_costs: Dict[int, dict] = {}
+        self._counters = None        # CounterCollector when enabled
         self._op_ctx_cache: Dict[tuple, tuple] = {}
         self._stream_ccts: Dict[int, CCT] = {}
         self._stream_lock = threading.Lock()
@@ -79,12 +81,36 @@ class Profiler:
         self._monitor.trace_sink = self._stream_profile_sink
 
     # ------------------------------------------------------------------ #
-    def register_module(self, name: str, hlo_text: str) -> int:
-        """Record a loaded 'GPU binary' for later analysis (§3)."""
+    def register_module(self, name: str, hlo_text: str,
+                        cost: Optional[dict] = None) -> int:
+        """Record a loaded 'GPU binary' for later analysis (§3).
+
+        ``cost`` is the module's ``compiled.cost_analysis()`` dict; when
+        given, hardware-counter readings (enable_counters) calibrate
+        their flop/byte totals against it instead of relying purely on
+        the parsed estimates."""
         mid = len(self._modules) + 1
         self._modules[mid] = parse_hlo(hlo_text, name=name)
         self._module_names[mid] = name
+        if cost is not None:
+            # jax may hand back a single-element list
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
+            self._module_costs[mid] = dict(cost)
         return mid
+
+    def enable_counters(self, counters, *, replay: bool = True):
+        """Turn on kernel-granularity hardware-counter collection
+        (paper §6; repro.counters).  Returns the multiplex schedule.
+
+        ``replay=True`` serializes replay passes so every requested
+        counter is measured on every kernel execution; ``replay=False``
+        rotates counter groups across invocations (single-pass
+        best-effort multiplexing).  Must be called identically on every
+        rank so aggregated profiles agree on the counter columns."""
+        from repro.counters.collector import CounterCollector
+        self._counters = CounterCollector(counters, replay=replay)
+        return self._counters.schedule
 
     def module(self, mid: int) -> HloModule:
         return self._modules[mid]
@@ -149,6 +175,7 @@ class Profiler:
             t1 = self.clock()
             dur = duration_ns if duration_ns is not None else t1 - t0
             samples = None
+            meta = None
             if kind == "kernel" and module_id in self._modules:
                 mod = self._modules[module_id]
                 if self.instrument:
@@ -156,9 +183,14 @@ class Profiler:
                 else:
                     samples = sampling.pc_samples(
                         mod, dur * 1e-9, self.sample_rate_hz, self._rng)
+                if self._counters is not None:
+                    # the counter reading rides the activity record
+                    # through the same SPSC channels (§4.1, §6)
+                    meta = {"counters": self._counters.read(
+                        mod, dur, self._module_costs.get(module_id))}
             act = GpuActivity(corr, kind, name, stream, t0, t0 + dur,
                               bytes=nbytes, samples=samples,
-                              module_id=module_id)
+                              module_id=module_id, meta=meta)
             while not ch.operation.try_push((ACTIVITY, act)):
                 self._drain_activities(st, ch)
             st.trace.append((t0, t0 + dur, ctx.node_id))
@@ -197,6 +229,10 @@ class Profiler:
         placeholder.metrics.add(kind, "time_ns", act.duration)
         if kind_name == "gpu_copy" and act.bytes:
             placeholder.metrics.add(kind, "bytes", act.bytes)
+        if act.meta is not None:
+            cvec = act.meta.get("counters")
+            if cvec is not None:
+                placeholder.metrics.add_vec(reg.kind("gpu_counter"), cvec)
         if act.samples and act.module_id is not None:
             mod = self._modules[act.module_id]
             ops = mod.all_ops()
@@ -238,6 +274,11 @@ class Profiler:
                                   else f"gpu_{act.kind}")
         node.metrics.add(kind, "invocations", 1)
         node.metrics.add(kind, "time_ns", act.duration)
+        if act.meta is not None:
+            cvec = act.meta.get("counters")
+            if cvec is not None:
+                node.metrics.add_vec(self.registry.kind("gpu_counter"),
+                                     cvec)
 
     # ------------------------------------------------------------------ #
     def flush(self, timeout: float = 10.0) -> bool:

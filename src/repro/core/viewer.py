@@ -111,6 +111,48 @@ def bottom_up(db: Database, metric: str, *, stat: str = "sum",
     return "\n".join(lines)
 
 
+def counter_table(db: Database, *, stat: str = "sum", top: int = 10,
+                  by: str = "gpu_kernel/time_ns") -> str:
+    """Per-kernel hardware-counter table (paper §6; repro.counters): one
+    row per GPU-kernel placeholder context, raw counter columns plus the
+    derived occupancy / efficiency columns of ``core.derived``."""
+    from repro.core.derived import (ACHIEVED_OCCUPANCY, BYTES_PER_FLOP,
+                                    FLOP_EFFICIENCY, REPLAY_PASS_COUNT,
+                                    database_columns)
+    cols = database_columns(db, stat)
+    if "gpu_counter/elapsed_ns" not in cols:
+        return "COUNTERS  (no gpu_counter kind in this database)"
+    rows = [g for g, f in enumerate(db.frames)
+            if f.kind == "placeholder" and f.name.startswith("kernel:")
+            and cols["gpu_kernel/invocations"][g] > 0]
+    rows.sort(key=lambda g: -cols[by][g])
+    rows = rows[:top]
+    derived = {
+        "occupancy": ACHIEVED_OCCUPANCY.evaluate(cols),
+        "flop_eff": FLOP_EFFICIENCY.evaluate(cols),
+        "bytes/flop": BYTES_PER_FLOP.evaluate(cols),
+        "passes": REPLAY_PASS_COUNT.evaluate(cols),
+    }
+    header = ["kernel", "invocs", "time_ns", "flops", "hbm_bytes",
+              "occupancy", "flop_eff", "bytes/flop", "passes"]
+    table = [[db.frames[g].pretty(),
+              _fmt(cols["gpu_kernel/invocations"][g]),
+              _fmt(cols["gpu_kernel/time_ns"][g]),
+              _fmt(cols["gpu_counter/flops"][g]),
+              _fmt(cols["gpu_counter/hbm_bytes"][g]),
+              f"{derived['occupancy'][g]:.3f}",
+              f"{derived['flop_eff'][g]:.3e}",
+              f"{derived['bytes/flop'][g]:.3f}",
+              f"{derived['passes'][g]:.1f}"] for g in rows]
+    widths = [max(len(header[i]), *(len(r[i]) for r in table)) if table
+              else len(header[i]) for i in range(len(header))]
+    lines = [f"COUNTERS  [{stat}]  ({len(rows)} kernel context(s))",
+             "  ".join(h.ljust(widths[i]) for i, h in enumerate(header))]
+    for r in table:
+        lines.append("  ".join(v.ljust(widths[i]) for i, v in enumerate(r)))
+    return "\n".join(lines)
+
+
 def thread_plot(db: Database, cms_reader, ctx: int, metric: str,
                 ) -> Tuple[np.ndarray, np.ndarray]:
     """(profile ids, values) for one CCT node across profiles — the

@@ -15,7 +15,8 @@ from repro.traceview.render import (depth_selector, render, render_view,
                                     statistic_panel)
 from repro.traceview.stats import (blame_over_time, interval_profile,
                                    merge_intervals, occupancy, summary,
-                                   top_kernels, windowed_blame)
+                                   top_kernel_counters, top_kernels,
+                                   windowed_blame)
 from repro.traceview.tracedb import TraceDB, build_db
 
 __all__ = [
@@ -23,6 +24,7 @@ __all__ = [
     "Raster", "rasterize", "ancestors_at_depth", "tree_depths", "IDLE",
     "render", "render_view", "depth_selector", "statistic_panel",
     "summary", "interval_profile", "occupancy", "top_kernels",
+    "top_kernel_counters",
     "blame_over_time", "windowed_blame", "merge_intervals",
     "TraceFilter", "apply_filter", "subtree_mask",
 ]

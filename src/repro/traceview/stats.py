@@ -155,6 +155,36 @@ def top_kernels(lines: Sequence[TraceData], db, *, t0: int, t1: int,
             for g in order if prof[g] > 0]
 
 
+def top_kernel_counters(lines: Sequence[TraceData], db, *, t0: int, t1: int,
+                        k: int = 5, stat: str = "sum"
+                        ) -> List[Tuple[str, float, Dict[str, float]]]:
+    """Top-k kernels by windowed busy time, joined with the database's
+    hardware-counter derived columns (paper §6; repro.counters): each row
+    is ``(name, busy_ns, {occupancy, flop_eff, bytes_per_flop,
+    replay_passes})``.  Counter stats are whole-run aggregates (counters
+    are kernel-granularity, not time-binned), while busy_ns respects the
+    window — the same join the hpcviewer trace view's kernel table shows.
+    Requires a ``Database`` with the ``gpu_counter`` kind; rows without
+    counter data carry zeros (the derived zero-division policy)."""
+    from repro.core.derived import (ACHIEVED_OCCUPANCY, BYTES_PER_FLOP,
+                                    FLOP_EFFICIENCY, REPLAY_PASS_COUNT,
+                                    database_columns)
+    gpu = [td for td in lines if td.identity.get("type") == "gpu"]
+    prof = interval_profile(gpu, len(db.frames), t0, t1)
+    order = np.argsort(-prof, kind="stable")[:k]
+    cols = database_columns(db, stat)
+    if "gpu_counter/elapsed_ns" not in cols:
+        return [(db.frames[g].pretty(), float(prof[g]), {})
+                for g in order if prof[g] > 0]
+    derived = {"occupancy": ACHIEVED_OCCUPANCY.evaluate(cols),
+               "flop_eff": FLOP_EFFICIENCY.evaluate(cols),
+               "bytes_per_flop": BYTES_PER_FLOP.evaluate(cols),
+               "replay_passes": REPLAY_PASS_COUNT.evaluate(cols)}
+    return [(db.frames[g].pretty(), float(prof[g]),
+             {name: float(vals[g]) for name, vals in derived.items()})
+            for g in order if prof[g] > 0]
+
+
 # --------------------------------------------------------------------------
 # Idleness / blame over time
 # --------------------------------------------------------------------------

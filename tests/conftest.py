@@ -1,0 +1,19 @@
+"""Shared pytest wiring: the golden-file update flag.
+
+``pytest --update-goldens`` rewrites the checked-in golden outputs under
+``tests/goldens/`` from the current renderer output instead of comparing
+against them (see tests/test_goldens.py).
+"""
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-goldens", action="store_true", default=False,
+        help="rewrite tests/goldens/* from current output instead of "
+             "comparing")
+
+
+@pytest.fixture
+def update_goldens(request):
+    return request.config.getoption("--update-goldens")

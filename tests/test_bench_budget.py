@@ -1,0 +1,37 @@
+"""benchmarks/run.py budget enforcement (ISSUE 3 satellite): a tracked
+benchmark exceeding its stated budget must fail the sweep loudly, naming
+the benchmark and stage — not just write BENCH_*.json."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.run import ALL, TRACKED, budget_regressions  # noqa: E402
+
+
+def test_budget_regression_messages_name_bench_and_stage():
+    results = {"merge_under_budget": False, "merge_budget_s": 8.0,
+               "merge_s": 9.1, "schedule_under_budget": True,
+               "schedules_per_s": 1e5}
+    msgs = budget_regressions("counters", results)
+    assert len(msgs) == 1
+    assert "counters" in msgs[0] and "merge" in msgs[0]
+    assert "merge_budget_s" in msgs[0]
+
+
+def test_no_regressions_when_under_budget():
+    assert budget_regressions("x", {"a_under_budget": True, "b": 1}) == []
+    assert budget_regressions("x", {}) == []
+
+
+def test_multiple_stages_reported_independently():
+    msgs = budget_regressions("traceview", {
+        "raster_under_budget": False, "raster_budget_s": 1.0,
+        "merge_under_budget": False, "merge_budget_s": 2.0})
+    assert len(msgs) == 2
+    stages = {m.split(": ")[1].split(" ")[0] for m in msgs}
+    assert stages == {"raster", "merge"}
+
+
+def test_counters_benchmark_is_tracked():
+    assert "counters" in ALL and "counters" in TRACKED

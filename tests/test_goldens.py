@@ -1,0 +1,144 @@
+"""Golden-file regression tests for the user-facing text reports
+(core/viewer.py and traceview/render.py).
+
+The views are the product surface of this tool — the paper's hpcviewer /
+hpctraceviewer screens rendered as text — so formatting refactors must
+not silently change them.  Each test renders a fully deterministic
+fixture database and compares byte-for-byte against a checked-in golden
+under ``tests/goldens/``.
+
+To intentionally change the output format::
+
+    PYTHONPATH=src python -m pytest tests/test_goldens.py --update-goldens
+
+then review the golden diff like any other code change.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.aggregate import aggregate
+from repro.core.cct import CCT, Frame, HOST, PLACEHOLDER
+from repro.core.metrics import GPU_COUNTER_METRICS, default_registry
+from repro.core.profmt import write_profile
+from repro.core.trace import TraceWriter
+from repro.counters import COUNTER_INDEX
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+
+
+def check_golden(name: str, text: str, update: bool) -> None:
+    path = os.path.join(GOLDEN_DIR, name)
+    if update:
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            f.write(text + "\n")
+        pytest.skip(f"golden {name} updated")
+    assert os.path.exists(path), \
+        f"missing golden {name}; run pytest --update-goldens to create it"
+    with open(path) as f:
+        expect = f.read()
+    assert text + "\n" == expect, (
+        f"{name} drifted from its golden.  If the change is intentional, "
+        "re-run with --update-goldens and review the diff.")
+
+
+@pytest.fixture(scope="module")
+def fixture_db(tmp_path_factory):
+    """Deterministic 4-rank measurement: two host frames, two kernels
+    (one with counter data), a copy, and aligned traces."""
+    tmp = tmp_path_factory.mktemp("goldens_db")
+    reg = default_registry()
+    kkind = reg.kind("gpu_kernel")
+    ckind = reg.kind("gpu_counter")
+    pkind = reg.kind("gpu_copy")
+    cpu = reg.kind("cpu")
+    cvec = np.zeros(len(GPU_COUNTER_METRICS))
+    cvec[COUNTER_INDEX["elapsed_ns"]] = 1_000.0
+    cvec[COUNTER_INDEX["active_ns"]] = 250.0
+    cvec[COUNTER_INDEX["flops"]] = 98_500_000.0
+    cvec[COUNTER_INDEX["hbm_bytes"]] = 197_000_000.0
+    cvec[COUNTER_INDEX["replay_passes"]] = 2.0
+    paths, traces = [], []
+    for r in range(4):
+        cct = CCT()
+        main = cct.insert_path([Frame(HOST, "main", "app.py", 1)])
+        step = cct.insert_path([Frame(HOST, "step", "app.py", 10)],
+                               parent=main)
+        ph = cct.get_or_insert(step,
+                               Frame(PLACEHOLDER, "kernel:train", "0", 0))
+        ph.metrics.add(kkind, "invocations", 2 + r)
+        ph.metrics.add(kkind, "time_ns", 400.0 * (r + 1))
+        ph.metrics.add_vec(ckind, cvec * (r + 1))
+        ph2 = cct.get_or_insert(step,
+                                Frame(PLACEHOLDER, "kernel:eval", "0", 0))
+        ph2.metrics.add(kkind, "invocations", 1)
+        ph2.metrics.add(kkind, "time_ns", 100.0)
+        cp = cct.get_or_insert(main,
+                               Frame(PLACEHOLDER, "copy:h2d", "1", 0))
+        cp.metrics.add(pkind, "invocations", 1)
+        cp.metrics.add(pkind, "bytes", 4096.0)
+        main.metrics.add(cpu, "time_ns", 2_000.0)
+        p = str(tmp / f"profile_r{r}_t0.rpro")
+        write_profile(p, cct, reg,
+                      {"rank": r, "thread": 0, "type": "cpu"}, [])
+        paths.append(p)
+        tw = TraceWriter(p.replace(".rpro", ".rtrc"),
+                         {"rank": r, "thread": 0, "type": "cpu"})
+        tw.append(0, 400, step.node_id)
+        tw.append(400, 900, ph.node_id)
+        tw.append(900, 1000, ph2.node_id)
+        tw.close()
+        traces.append(tw.path)
+        gw = TraceWriter(str(tmp / f"trace_r{r}_s0.rtrc"),
+                         {"rank": r, "stream": 0, "type": "gpu"})
+        gw.append(400, 700 + 50 * r, ph.node_id)
+        gw.append(900, 960, ph2.node_id)
+        gw.close()
+        traces.append(gw.path)
+    db = aggregate(paths, str(tmp / "db"), n_ranks=2, n_threads=2,
+                   trace_paths=traces)
+    return db
+
+
+def test_viewer_top_down_golden(fixture_db, update_goldens):
+    from repro.core import viewer
+    out = viewer.top_down(fixture_db, "gpu_kernel/time_ns", max_depth=4)
+    check_golden("viewer_top_down.txt", out, update_goldens)
+
+
+def test_viewer_flat_golden(fixture_db, update_goldens):
+    from repro.core import viewer
+    out = viewer.flat(fixture_db, "gpu_kernel/time_ns", top=10)
+    check_golden("viewer_flat.txt", out, update_goldens)
+
+
+def test_viewer_bottom_up_golden(fixture_db, update_goldens):
+    from repro.core import viewer
+    out = viewer.bottom_up(fixture_db, "gpu_kernel/time_ns", top=5)
+    check_golden("viewer_bottom_up.txt", out, update_goldens)
+
+
+def test_viewer_counter_table_golden(fixture_db, update_goldens):
+    from repro.core import viewer
+    out = viewer.counter_table(fixture_db, top=5)
+    check_golden("viewer_counter_table.txt", out, update_goldens)
+
+
+def test_traceview_render_golden(fixture_db, update_goldens):
+    from repro.traceview import TraceDB, render_view
+    tdb = TraceDB(fixture_db.trace_db_path())
+    out = render_view(tdb.line_views(), fixture_db, width=64, height=12,
+                      depth=2, top=5)
+    check_golden("traceview_render.txt", out, update_goldens)
+
+
+def test_traceview_two_zooms_golden(fixture_db, update_goldens):
+    """A zoomed window must stay stable too (different code path: window
+    clipping + per-window glyph assignment)."""
+    from repro.traceview import TraceDB, render_view
+    tdb = TraceDB(fixture_db.trace_db_path())
+    out = render_view(tdb.line_views(), fixture_db, t0=400, t1=900,
+                      width=48, height=8, depth=3, top=4)
+    check_golden("traceview_render_zoom.txt", out, update_goldens)
