@@ -1,0 +1,121 @@
+"""Sharded aggregation + database merge vs one-shot (ISSUE 4).
+
+The continuous-profiling pitch: shards of a measurement directory are
+aggregated *independently* (separate processes in production — no shared
+GIL), then ``merge_databases`` folds the shard databases.  The fold must
+be (a) byte-identical to the one-shot database over the union — asserted
+here on stats/cms/pms, the merge contract — and (b) cheap relative to
+re-aggregating from scratch, since an incremental epoch pays one shard
+aggregation plus one merge instead of a full recompute.
+
+Reported numbers:
+
+- ``one_shot_s``      — ``aggregate()`` over all P profiles;
+- ``shard_total_s``   — sum of the S per-shard aggregations (an MPI/
+  multi-process deployment pays ``max``, not ``sum``; both reported);
+- ``merge_s``         — folding the S shard databases (budgeted);
+- ``incremental_s``   — extending an existing database with one shard via
+  ``aggregate(..., base_db=...)`` — the steady-state epoch cost.
+
+``SEED_BASELINE`` pins the first measurement of this subsystem (this
+container, best of ``repeats``) so the cross-PR trajectory is visible in
+``BENCH_merge.json``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from repro.core.aggregate import aggregate
+from repro.core.merge import merge_databases
+
+from benchmarks.bench_aggregation import make_inputs
+
+MERGE_BUDGET_S = 2.0        # 4-shard fold @ 16 profiles (x150-host CCTs)
+
+# First measurement of the merge subsystem (PR 4, this container, best
+# of 3): 16 profiles, 4 shards.
+SEED_BASELINE = {
+    "n_profiles": 16,
+    "one_shot_s": 0.76,
+    "merge_s": 0.35,
+}
+
+
+def _db_bytes(d: str):
+    return {fn: open(os.path.join(d, fn), "rb").read()
+            for fn in ("stats.npz", "metrics.cms", "metrics.pms")}
+
+
+def run(n_profiles: int = 16, n_shards: int = 4, repeats: int = 3):
+    tmp = tempfile.mkdtemp(prefix="repro_merge_")
+    paths = make_inputs(n_profiles, tmp)
+    shards = [paths[i::n_shards] for i in range(n_shards)]
+
+    best = None
+    for rep in range(max(1, repeats)):
+        r = {}
+        t0 = time.perf_counter()
+        one = os.path.join(tmp, f"one_{rep}")
+        aggregate(paths, one)
+        r["one_shot_s"] = time.perf_counter() - t0
+
+        shard_dirs, shard_times = [], []
+        for s, sp in enumerate(shards):
+            d = os.path.join(tmp, f"shard_{rep}_{s}")
+            t0 = time.perf_counter()
+            aggregate(sp, d)
+            shard_times.append(time.perf_counter() - t0)
+            shard_dirs.append(d)
+        r["shard_total_s"] = sum(shard_times)
+        r["shard_max_s"] = max(shard_times)
+
+        t0 = time.perf_counter()
+        merged = os.path.join(tmp, f"merged_{rep}")
+        merge_databases(shard_dirs, merged)
+        r["merge_s"] = time.perf_counter() - t0
+
+        # the contract this whole subsystem exists for
+        assert _db_bytes(merged) == _db_bytes(one), \
+            "shard-then-merge diverged from one-shot aggregate()"
+
+        # steady-state epoch: extend the first (n_shards-1) shards'
+        # database with the last shard's profiles
+        base = os.path.join(tmp, f"base_{rep}")
+        merge_databases(shard_dirs[:-1], base)
+        t0 = time.perf_counter()
+        aggregate(shards[-1], base, base_db=base)
+        r["incremental_s"] = time.perf_counter() - t0
+        assert _db_bytes(base) == _db_bytes(one), \
+            "incremental extension diverged from one-shot aggregate()"
+
+        if best is None or r["merge_s"] < best["merge_s"]:
+            best = r
+
+    out = {
+        "n_profiles": n_profiles,
+        "n_shards": n_shards,
+        **best,
+        "byte_identical": True,     # asserted above, every repeat
+        "merge_vs_one_shot_x": best["one_shot_s"] / best["merge_s"],
+        "modeled_multiprocess_s": best["shard_max_s"] + best["merge_s"],
+        "merge_under_budget": bool(best["merge_s"] < MERGE_BUDGET_S),
+        "merge_budget_s": MERGE_BUDGET_S,
+    }
+    if n_profiles == SEED_BASELINE["n_profiles"]:
+        out["seed_one_shot_s"] = SEED_BASELINE["one_shot_s"]
+        out["seed_merge_s"] = SEED_BASELINE["merge_s"]
+        out["merge_vs_seed_x"] = SEED_BASELINE["merge_s"] / best["merge_s"]
+    return out
+
+
+def main(small: bool = False):
+    r = run(n_profiles=6, n_shards=3, repeats=1) if small else run()
+    for k, v in r.items():
+        print(f"bench_merge,{k},{v}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

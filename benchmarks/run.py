@@ -17,8 +17,8 @@ import time
 import traceback
 
 from benchmarks import (bench_aggregation, bench_channels, bench_counters,
-                        bench_overhead, bench_reconstruction, bench_roofline,
-                        bench_sparse, bench_traceview)
+                        bench_merge, bench_overhead, bench_reconstruction,
+                        bench_roofline, bench_sparse, bench_traceview)
 
 ALL = {
     "channels": bench_channels,        # §4.1 wait-free channels
@@ -29,10 +29,11 @@ ALL = {
     "roofline": bench_roofline,        # deliverable (g)
     "traceview": bench_traceview,      # §4.4/§7 trace.db merge + raster
     "counters": bench_counters,        # §6 counter schedule + merge
+    "merge": bench_merge,              # ISSUE 4 sharded/incremental merge
 }
 
 # benchmarks whose results are persisted as BENCH_<name>.json
-TRACKED = ("aggregation", "channels", "traceview", "counters")
+TRACKED = ("aggregation", "channels", "traceview", "counters", "merge")
 
 
 def budget_regressions(name: str, results: dict) -> list:

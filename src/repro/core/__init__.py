@@ -2,3 +2,4 @@
 JAX/TPU programs.  See DESIGN.md for the GPU->TPU adaptation map."""
 from repro.core.profiler import Profiler               # noqa: F401
 from repro.core.aggregate import aggregate, Database   # noqa: F401
+from repro.core.merge import merge_databases           # noqa: F401

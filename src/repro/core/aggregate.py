@@ -31,10 +31,21 @@ same algorithms hpcprof-mpi runs over MPI; docs/aggregation.md discusses
 the honesty of this mapping, the GIL caveats, and the bit-exactness
 contract (the vectorized path reproduces the reference implementation's
 floating-point addition order, so databases are byte-identical).
+
+**Canonical-database contract** (ISSUE 4): the bytes of every output —
+tree, stats, CMS/PMS cubes, trace.db — are a pure function of the
+*profile set*, independent of ``n_ranks`` / ``n_threads`` / input path
+order.  Context ids are renumbered into canonical BFS order (children
+sorted by frame key) after unification, and profile ids are assigned in
+canonical identity order.  This is what makes sharded aggregation
+composable: ``repro.core.merge`` folds independently-built databases
+into bytes identical to a one-shot ``aggregate()`` over the union
+(docs/aggregation.md §incremental merge).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import time
@@ -200,6 +211,86 @@ class GlobalTree:
     def depths(self) -> np.ndarray:
         """Per-node depth (root = 0), see ``cct.tree_depths``."""
         return tree_depths(self.parents)
+
+
+# --------------------------------------------------------------------------
+# Canonicalization: the database-bytes-are-a-pure-function contract
+# --------------------------------------------------------------------------
+def canonical_order(frames: List[Frame], parents) -> np.ndarray:
+    """Old context id -> canonical id.
+
+    Canonical numbering is a BFS of the tree with each node's children
+    visited in sorted frame-key order ``(kind, name, module, line)`` —
+    a pure function of the tree's *shape*, independent of the insertion
+    order that built it.  Properties the pipeline relies on:
+
+    - topological: a parent's canonical id precedes all its children's
+      (so the reverse-id / level-order inclusive sweeps stay valid);
+    - the relative order of any two children of one parent is decided by
+      frame-key comparison alone, so it is identical in every tree that
+      contains both — per-profile inclusive values come out bitwise
+      identical whether a profile is aggregated inside a shard or inside
+      the full union (the heart of the ``merge_databases`` byte-identity
+      contract, docs/aggregation.md).
+    """
+    n = len(frames)
+    parents = np.asarray(parents, np.int64)
+    key_rank = {k: i for i, k in enumerate(sorted(
+        {(f.kind, f.name, f.module, f.line) for f in frames}))}
+    frank = np.fromiter(
+        (key_rank[(f.kind, f.name, f.module, f.line)] for f in frames),
+        np.int64, n)
+    depth = tree_depths(parents)
+    new_id = np.zeros(n, np.int64)
+    done = 1                       # root keeps id 0
+    for lvl in range(1, int(depth.max()) + 1 if n > 1 else 1):
+        idx = np.nonzero(depth == lvl)[0]
+        if len(idx) == 0:
+            break
+        order = np.lexsort((frank[idx], new_id[parents[idx]]))
+        new_id[idx[order]] = np.arange(done, done + len(idx))
+        done += len(idx)
+    return new_id
+
+
+def apply_order(frames: List[Frame], parents, new_id: np.ndarray
+                ) -> Tuple[List[Frame], np.ndarray]:
+    """Permute a (frames, parents) tree by an old->new id map."""
+    parents = np.asarray(parents, np.int64)
+    frames_c: List[Frame] = list(frames)
+    for old, new in enumerate(new_id.tolist()):
+        frames_c[new] = frames[old]
+    parents_c = np.full(len(frames), -1, np.int64)
+    has_par = parents >= 0
+    parents_c[new_id[has_par]] = new_id[parents[has_par]]
+    return frames_c, parents_c
+
+
+def _ident_int(identity: dict, *keys) -> int:
+    for k in keys:
+        v = identity.get(k)
+        if v is not None:
+            try:
+                return int(v)
+            except (TypeError, ValueError):
+                return 0
+    return 0
+
+
+def profile_sort_key(identity: dict, ctx: np.ndarray, met: np.ndarray,
+                     val: np.ndarray) -> tuple:
+    """Canonical profile order: host, rank, CPU threads before GPU
+    streams, thread/stream index (the trace.db line order), then the full
+    identity JSON, then a digest of the value triplets as a content
+    tie-break — a pure function of the profile, never of input order."""
+    digest = hashlib.sha256(
+        np.ascontiguousarray(ctx.astype("<u4")).tobytes()
+        + np.ascontiguousarray(met.astype("<u4")).tobytes()
+        + np.ascontiguousarray(val.astype("<f8")).tobytes()).hexdigest()
+    return (str(identity.get("host", "")), _ident_int(identity, "rank"),
+            0 if identity.get("type", "cpu") == "cpu" else 1,
+            _ident_int(identity, "thread", "stream"),
+            json.dumps(identity, sort_keys=True), digest)
 
 
 # --------------------------------------------------------------------------
@@ -373,6 +464,92 @@ def _profile_inclusive_sparse(prof: ProfileData, gmap: np.ndarray,
 
 
 # --------------------------------------------------------------------------
+# Database writing (shared with repro.core.merge)
+# --------------------------------------------------------------------------
+def _write_database(out_dir: str, frames: List[Frame], parents: np.ndarray,
+                    metrics: List[str],
+                    profiles: List[Tuple[dict, np.ndarray, np.ndarray,
+                                         np.ndarray]],
+                    *, n_workers: int, t0: float,
+                    timing_base: Optional[dict] = None) -> Database:
+    """Fold per-profile inclusive triplets into the on-disk database.
+
+    ``profiles`` is a list of ``(identity, ctx, metric, value)`` sparse
+    triplets against canonical context ids, in *any* order: profiles are
+    sorted into canonical order here (``profile_sort_key``), so stats
+    accumulation, the CMS/PMS cubes, and ``meta.json`` come out
+    byte-identical for any arrival order — the single writer behind both
+    ``aggregate()`` and ``merge_databases()``.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    n_ctx = len(frames)
+    n_metrics = len(metrics)
+    prepped = []
+    for ident, ctx, met, val in profiles:
+        ctx = np.asarray(ctx, np.int64)
+        met = np.asarray(met, np.int64)
+        val = np.asarray(val, np.float64)
+        o = np.lexsort((met, ctx))          # row-major, defensive re-sort
+        ctx, met, val = ctx[o], met[o], val[o]
+        prepped.append((profile_sort_key(ident, ctx, met, val),
+                        ident, ctx, met, val))
+    prepped.sort(key=lambda it: it[0])
+
+    identities: Dict[int, dict] = {}
+    pvals: List[ProfileValues] = []
+    acc_sum = np.zeros((n_ctx, n_metrics))
+    acc_min = np.full((n_ctx, n_metrics), np.inf)
+    acc_max = np.full((n_ctx, n_metrics), -np.inf)
+    acc_sumsq = np.zeros((n_ctx, n_metrics))
+    acc_count = np.zeros((n_ctx, n_metrics))
+    for pidx, (_, ident, ctx, met, val) in enumerate(prepped):
+        identities[pidx] = ident
+        pvals.append(ProfileValues(pidx, ctx.astype(np.uint32),
+                                   met.astype(np.uint32), val))
+        idx = (ctx, met)
+        acc_sum[idx] += val           # (ctx, metric) pairs unique per profile
+        np.minimum.at(acc_min, idx, val)
+        np.maximum.at(acc_max, idx, val)
+        acc_sumsq[idx] += val ** 2
+        acc_count[idx] += 1
+
+    count = np.maximum(acc_count, 1)
+    mean = acc_sum / count
+    var = np.maximum(acc_sumsq / count - mean ** 2, 0.0)
+    std = np.sqrt(var)
+    stats = {
+        "sum": acc_sum,
+        "min": np.where(np.isfinite(acc_min), acc_min, 0.0),
+        "mean": mean,
+        "max": np.where(np.isfinite(acc_max), acc_max, 0.0),
+        "std": std,
+        "cov": np.where(mean != 0, std / np.maximum(np.abs(mean), 1e-30),
+                        0.0),
+        "count": acc_count,
+    }
+
+    cms_info = write_cms(os.path.join(out_dir, "metrics.cms"), pvals,
+                         n_workers=n_workers)
+    pms_info = write_pms(os.path.join(out_dir, "metrics.pms"), pvals,
+                         n_workers=n_workers)
+
+    meta = {
+        "frames": [[f.kind, f.name, f.module, f.line] for f in frames],
+        "parents": [int(p) for p in parents],
+        "metrics": metrics,
+        "profiles": {str(i): ident for i, ident in identities.items()},
+        "cms": cms_info, "pms": pms_info,
+        "timing": {**(timing_base or {}),
+                   "total_s": time.monotonic() - t0},
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    np.savez(os.path.join(out_dir, "stats.npz"), **stats)
+    return Database(out_dir, frames, np.asarray(parents), metrics,
+                    identities, stats)
+
+
+# --------------------------------------------------------------------------
 # The aggregation driver
 # --------------------------------------------------------------------------
 def aggregate(profile_paths: Sequence[str], out_dir: str, *,
@@ -380,7 +557,19 @@ def aggregate(profile_paths: Sequence[str], out_dir: str, *,
               structures: Optional[Dict[str, HloModule]] = None,
               trace_paths: Sequence[str] = (),
               trace_db: bool = True,
+              base_db: "Optional[str | Database]" = None,
               timing: Optional[dict] = None) -> Database:
+    """One-shot aggregation of ``profile_paths`` into ``out_dir``.
+
+    With ``base_db`` (a database directory or ``Database``), runs in
+    incremental mode: the new profiles extend the base database and the
+    output is byte-identical to a one-shot run over the union — see
+    ``_aggregate_incremental`` and ``repro.core.merge``."""
+    if base_db is not None:
+        return _aggregate_incremental(
+            profile_paths, out_dir, base_db, n_ranks=n_ranks,
+            n_threads=n_threads, structures=structures,
+            trace_paths=trace_paths, trace_db=trace_db, timing=timing)
     os.makedirs(out_dir, exist_ok=True)
     t0 = time.monotonic()
     expand = make_expander(structures) if structures else None
@@ -415,73 +604,37 @@ def aggregate(profile_paths: Sequence[str], out_dir: str, *,
         mappings[i] = root.merge_tree(trees[i])
     t_unify = time.monotonic() - t0
 
-    n_ctx = len(root.frames)
-    # broadcast: convert each profile's local->rank mapping to ->global
+    # canonical context renumbering: database ids are a pure function of
+    # the profile set, independent of n_ranks / path order (merge contract)
+    new_id = canonical_order(root.frames, root.parents)
+    frames_c, parents_c = apply_order(root.frames, root.parents, new_id)
+
+    # broadcast: convert each profile's local->rank mapping to ->canonical
     all_profiles: List[Tuple[str, ProfileData, np.ndarray]] = []
     for r, (tree, profs) in enumerate(rank_results):
         conv = mappings[r]
         for path, prof, mapping in profs:
             gmap = mapping if conv is None else conv[mapping]
-            all_profiles.append((path, prof, gmap))
+            all_profiles.append((path, prof, new_id[gmap]))
 
     # phase 4: statistic generation (parallel over profiles).  Workers are
     # communication-free: each returns its profile's sparse triplets; the
-    # partial accumulators are folded below, once, in profile order — no
-    # shared state, no lock, and a deterministic result.
+    # partial accumulators are folded in _write_database, once, in
+    # canonical profile order — no shared state, no lock, deterministic.
     metrics = all_profiles[0][1].metrics if all_profiles else []
     n_metrics = len(metrics)
-    parents = np.asarray(root.parents)
-    depth = root.depths()
+    parents = parents_c
+    depth = tree_depths(parents_c)
 
     def gen_stats(args):
-        pidx, (path, prof, gmap) = args
+        path, prof, gmap = args
         ctx, met, val = _profile_inclusive_sparse(prof, gmap, parents,
                                                   depth, n_metrics)
-        return (pidx, prof.identity,
-                ProfileValues(pidx, ctx.astype(np.uint32),
-                              met.astype(np.uint32), val))
+        return (prof.identity, ctx, met, val)
 
     with ThreadPoolExecutor(max(1, n_ranks * n_threads)) as ex:
-        results = list(ex.map(gen_stats, enumerate(all_profiles)))
-    identities: Dict[int, dict] = {pidx: ident for pidx, ident, _ in results}
-    pvals: List[ProfileValues] = [pv for _, _, pv in results]
-
-    # merge of per-profile partials (ascending profile id)
-    acc_sum = np.zeros((n_ctx, n_metrics))
-    acc_min = np.full((n_ctx, n_metrics), np.inf)
-    acc_max = np.full((n_ctx, n_metrics), -np.inf)
-    acc_sumsq = np.zeros((n_ctx, n_metrics))
-    acc_count = np.zeros((n_ctx, n_metrics))
-    for pv in pvals:
-        idx = (pv.ctx.astype(np.int64), pv.metric.astype(np.int64))
-        vals = pv.values
-        acc_sum[idx] += vals          # (ctx, metric) pairs unique per profile
-        np.minimum.at(acc_min, idx, vals)
-        np.maximum.at(acc_max, idx, vals)
-        acc_sumsq[idx] += vals ** 2
-        acc_count[idx] += 1
+        profile_items = list(ex.map(gen_stats, all_profiles))
     t_stats = time.monotonic() - t0 - t_unify
-
-    count = np.maximum(acc_count, 1)
-    mean = acc_sum / count
-    var = np.maximum(acc_sumsq / count - mean ** 2, 0.0)
-    std = np.sqrt(var)
-    stats = {
-        "sum": acc_sum,
-        "min": np.where(np.isfinite(acc_min), acc_min, 0.0),
-        "mean": mean,
-        "max": np.where(np.isfinite(acc_max), acc_max, 0.0),
-        "std": std,
-        "cov": np.where(mean != 0, std / np.maximum(np.abs(mean), 1e-30),
-                        0.0),
-        "count": acc_count,
-    }
-
-    # sparse cube outputs (pvals already ascend by profile id)
-    cms_info = write_cms(os.path.join(out_dir, "metrics.cms"), pvals,
-                         n_workers=n_ranks * n_threads)
-    pms_info = write_pms(os.path.join(out_dir, "metrics.pms"), pvals,
-                         n_workers=n_ranks * n_threads)
 
     # phase 5: trace conversion (vectorized gather through gmap)
     path_to_gmap = {path: gmap for path, prof, gmap in all_profiles}
@@ -490,8 +643,16 @@ def aggregate(profile_paths: Sequence[str], out_dir: str, *,
         td = read_trace(tpath)
         ppath = tpath.replace(".rtrc", ".rpro")
         gmap = path_to_gmap.get(ppath)
+        identity = td.identity
+        if gmap is None:
+            # no matching profile: ctx ids pass through unmapped (e.g. the
+            # profiler's GPU-stream traces, which record app-thread node
+            # ids — see ROADMAP).  Mark the line so downstream composition
+            # (repro.core.merge) copies it verbatim instead of remapping
+            # ids that were never database ctx ids.
+            identity = {**identity, "ctx_unmapped": True}
         out = TraceWriter(os.path.join(out_dir, os.path.basename(tpath)),
-                          td.identity)
+                          identity)
         if gmap is None:
             gids = td.ctx
         else:
@@ -519,19 +680,45 @@ def aggregate(profile_paths: Sequence[str], out_dir: str, *,
         from repro.traceview.tracedb import build_db
         build_db(converted_traces, os.path.join(out_dir, "trace.db"))
 
-    meta = {
-        "frames": [[f.kind, f.name, f.module, f.line] for f in root.frames],
-        "parents": [int(p) for p in root.parents],
-        "metrics": metrics,
-        "profiles": {str(i): ident for i, ident in identities.items()},
-        "cms": cms_info, "pms": pms_info,
-        "timing": {"unify_s": t_unify, "stats_s": t_stats,
-                   "total_s": time.monotonic() - t0},
-    }
-    with open(os.path.join(out_dir, "meta.json"), "w") as f:
-        json.dump(meta, f)
-    np.savez(os.path.join(out_dir, "stats.npz"), **stats)
+    db = _write_database(out_dir, frames_c, parents_c, metrics,
+                         profile_items, n_workers=n_ranks * n_threads,
+                         t0=t0, timing_base={"unify_s": t_unify,
+                                             "stats_s": t_stats})
     if timing is not None:
-        timing.update(meta["timing"])
-    return Database(out_dir, root.frames, parents, metrics, identities,
-                    stats)
+        with open(os.path.join(out_dir, "meta.json")) as f:
+            timing.update(json.load(f)["timing"])
+    return db
+
+
+def _aggregate_incremental(profile_paths: Sequence[str], out_dir: str,
+                           base_db: str, *, n_ranks: int, n_threads: int,
+                           structures, trace_paths: Sequence[str],
+                           trace_db: bool, timing: Optional[dict]
+                           ) -> Database:
+    """``aggregate(..., base_db=...)``: extend an existing database with
+    new profiles.  The new profiles are aggregated into a scratch
+    database, then folded with the base through ``merge_databases`` — the
+    result is byte-identical to a one-shot ``aggregate()`` over the union
+    of the base's profiles and the new ones (the canonical contract).
+    ``out_dir`` may equal ``base_db`` (in-place epoch extension)."""
+    import shutil
+    import tempfile
+    from repro.core.merge import merge_databases
+
+    base_dir = base_db.out_dir if isinstance(base_db, Database) else base_db
+    t0 = time.monotonic()
+    scratch = tempfile.mkdtemp(prefix="repro_increment_")
+    try:
+        aggregate(profile_paths, scratch, n_ranks=n_ranks,
+                  n_threads=n_threads, structures=structures,
+                  trace_paths=trace_paths, trace_db=trace_db)
+        db = merge_databases([base_dir, scratch], out_dir,
+                             n_workers=n_ranks * n_threads,
+                             trace_db=trace_db)
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
+    if timing is not None:
+        with open(os.path.join(out_dir, "meta.json")) as f:
+            timing.update(json.load(f)["timing"])
+        timing["incremental_s"] = time.monotonic() - t0
+    return db

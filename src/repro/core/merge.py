@@ -1,0 +1,276 @@
+"""Incremental & sharded database merge (continuous profiling).
+
+The paper's ``hpcprof-mpi`` (§6.1) aggregates a whole measurement
+directory in one shot; its exascale follow-up ("Preparing for Performance
+Analysis at Exascale", Anderson et al.) gets to scale with a sparse
+format plus *composable* parallel reduction.  This module is that
+composition step: ``merge_databases`` folds N independently-built
+databases (shards of a measurement directory, or successive epochs of a
+long-running job) into one database whose bytes are **identical** to a
+one-shot ``aggregate()`` over the union of their profiles.
+
+Why that byte-identity is possible (the canonical contract,
+docs/aggregation.md):
+
+- context ids are canonical (BFS, children in frame-key order), so the
+  union tree renumbers the same no matter how profiles were sharded, and
+  the *relative* order of any node's children — the floating-point fold
+  order of the inclusive sweep — is the same in a shard tree as in the
+  union tree.  Per-profile inclusive values therefore come out bitwise
+  identical in both, differing only by the ctx renumbering this module
+  applies;
+- profile ids are canonical (identity order + content digest), so the
+  cross-profile accumulator fold and the CMS/PMS plane order do not
+  depend on which shard a profile arrived in;
+- ``trace.db`` lines merge by canonical identity order and re-merge
+  idempotently (repro.traceview.tracedb), so shard trace databases
+  re-fold after the same ctx remapping.
+
+The merge therefore never re-propagates metrics: it re-reads each
+shard's per-profile inclusive values from the PMS cube (``read_pms``),
+grafts the shard trees into one union tree (``GlobalTree.merge_tree``
+replayed from the serialized arrays), remaps ctx ids through the
+composed ``shard -> union -> canonical`` map, and hands everything to
+the same ``_write_database`` writer ``aggregate()`` uses.
+
+True multi-process parallelism falls out: shards of a measurement
+directory can be aggregated by *separate processes* (no shared GIL),
+then folded here — ``benchmarks/bench_merge.py`` measures exactly that
+against the one-shot wall-clock, and ``examples/continuous_profiling.py``
+demos the two production shapes (rank shards; epoch increments).
+
+CLI::
+
+    python -m repro.core.merge SHARD_DB... -o OUT_DB
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.aggregate import (Database, GlobalTree, _write_database,
+                                  apply_order, canonical_order)
+from repro.core.cct import Frame
+from repro.core.sparse import ProfileValues, read_pms
+from repro.core.trace import TraceData
+
+
+# --------------------------------------------------------------------------
+# Shard loading
+# --------------------------------------------------------------------------
+class LoadedShard:
+    """One input database, fully materialized (arrays are copies, so an
+    in-place merge may replace the files afterwards)."""
+
+    def __init__(self, out_dir: str, *, load_traces: bool = True):
+        self.out_dir = out_dir
+        db = Database.load(out_dir)
+        self.frames: List[Frame] = db.frames
+        self.parents = np.asarray(db.parents, np.int64)
+        self.metrics: List[str] = list(db.metrics)
+        self.identities: Dict[int, dict] = db.profile_ids
+        pms = db.pms_path()
+        self.pvals: List[ProfileValues] = \
+            read_pms(pms) if os.path.exists(pms) else []
+        if set(int(p.profile_id) for p in self.pvals) != \
+                set(self.identities):
+            raise ValueError(
+                f"{out_dir}: PMS profile planes do not match meta.json "
+                "profiles; refusing to merge a torn database")
+        self.trace_lines: List[TraceData] = []
+        tpath = db.trace_db_path()
+        if load_traces and os.path.exists(tpath):
+            from repro.traceview.tracedb import TraceDB
+            self.trace_lines = [
+                TraceData(td.identity, np.array(td.starts),
+                          np.array(td.ends), np.array(td.ctx))
+                for td in TraceDB(tpath).line_views()]
+
+
+# --------------------------------------------------------------------------
+# The merge driver
+# --------------------------------------------------------------------------
+def merge_databases(in_dirs: Sequence[str], out_dir: str, *,
+                    n_workers: int = 4,
+                    trace_db: bool = True) -> Database:
+    """Fold N databases into one, byte-identical to a one-shot
+    ``aggregate()`` over the union of their profiles.
+
+    The fold is associative and input-order-invariant (canonicalization
+    happens after the union), so any sharding of a measurement directory
+    — and any merge tree over the shards — lands on the same bytes
+    (property-tested in tests/test_merge_properties.py).  Profiles are
+    concatenated as a multiset; identities are not deduplicated.
+
+    The output is staged in a sibling temp dir and committed with a
+    directory swap, so ``out_dir`` may be one of ``in_dirs`` (in-place
+    epoch extension — every input is fully materialized before anything
+    is written) and a crash mid-merge never leaves a half-written mix of
+    old and new files: the worst case is the old database parked at
+    ``out_dir + ".pre-merge"`` (cleaned up on the next merge).  A merged
+    directory indexes traces solely via ``trace.db`` — the per-trace
+    ``.rtrc`` intermediates a one-shot ``aggregate()`` leaves are not
+    reproduced (and any stale ones in a replaced ``out_dir`` go away
+    with it).
+    """
+    if not in_dirs:
+        raise ValueError("merge_databases: need at least one input "
+                         "database")
+    t0 = time.monotonic()
+    shards = [LoadedShard(d, load_traces=trace_db) for d in in_dirs]
+
+    metrics: List[str] = []
+    for sh in shards:
+        if not sh.identities:
+            continue            # empty databases carry no metric columns
+        if not metrics:
+            metrics = sh.metrics
+        elif sh.metrics != metrics:
+            raise ValueError(
+                f"{sh.out_dir}: metric columns {sh.metrics[:3]}... differ "
+                f"from {metrics[:3]}...; databases must be measured with "
+                "identical metric registries to merge")
+
+    # union tree: graft every shard tree (LoadedShard duck-types the
+    # frames/parents pair merge_tree consumes — the same reduction step
+    # hpcprof's rank fold uses, replayed from meta.json arrays), then
+    # canonicalize — the result is a pure function of the union node
+    # set, not of shard order
+    union = GlobalTree()
+    mappings = [union.merge_tree(sh) for sh in shards]
+    new_id = canonical_order(union.frames, union.parents)
+    frames_c, parents_c = apply_order(union.frames, union.parents, new_id)
+    remaps = [new_id[m] for m in mappings]
+
+    # per-profile values: remap ctx through shard -> canonical-union ids.
+    # _write_database re-sorts rows and re-sorts profiles canonically, so
+    # shard order is irrelevant from here on.
+    profile_items: List[Tuple[dict, np.ndarray, np.ndarray, np.ndarray]] = []
+    for sh, remap in zip(shards, remaps):
+        for pv in sh.pvals:
+            ctx = remap[pv.ctx.astype(np.int64)]
+            profile_items.append(
+                (sh.identities[int(pv.profile_id)], ctx,
+                 pv.metric.astype(np.int64), pv.values))
+
+    # trace.db: remap each shard's lines and re-merge (idempotent path)
+    trace_lines: List[TraceData] = []
+    for sh, remap in zip(shards, remaps):
+        for td in sh.trace_lines:
+            if td.identity.get("ctx_unmapped"):
+                # aggregate() flagged this line as carrying raw
+                # (non-database) ctx ids; copy it verbatim — exactly what
+                # a one-shot aggregation over the union would emit
+                trace_lines.append(td)
+                continue
+            valid = (td.ctx >= 0) & (td.ctx < len(remap))
+            if not bool(valid.all()):
+                warnings.warn(
+                    f"{sh.out_dir}/trace.db: {int((~valid).sum())} event(s)"
+                    " reference ctx ids outside the shard tree; attributing"
+                    " them to the root context", RuntimeWarning)
+            ctx = np.where(valid, remap[np.clip(td.ctx, 0, len(remap) - 1)],
+                           0)
+            trace_lines.append(TraceData(td.identity, td.starts, td.ends,
+                                         ctx))
+
+    # stage the complete output in a sibling temp dir, then commit with a
+    # directory swap (two renames).  This is what makes in-place epoch
+    # extension safe — a crash never leaves out_dir as a half-written mix
+    # of old and new files — and it sweeps away anything stale a replaced
+    # out_dir held (old trace.db, converted .rtrc with dead ctx ids).
+    import shutil
+    import tempfile
+    out_abs = os.path.abspath(out_dir)
+    parent = os.path.dirname(out_abs) or "."
+    os.makedirs(parent, exist_ok=True)
+    work_dir = tempfile.mkdtemp(prefix=".merge_staging_", dir=parent)
+
+    db = _write_database(work_dir, frames_c, parents_c, metrics,
+                         profile_items, n_workers=max(1, n_workers), t0=t0,
+                         timing_base={"merged_dbs": len(shards)})
+    if trace_lines and trace_db:
+        from repro.traceview.tracedb import build_db
+        build_db(trace_lines, os.path.join(work_dir, "trace.db"))
+
+    backup = out_abs + ".pre-merge"
+    if os.path.lexists(backup):       # leftover of a crashed prior merge
+        shutil.rmtree(backup, ignore_errors=True)
+    if os.path.lexists(out_abs):
+        # only ever replace a database directory (or an empty one) — a
+        # typo'd -o must not vaporize unrelated files
+        if not os.path.isdir(out_abs) or (
+                os.listdir(out_abs)
+                and not os.path.exists(os.path.join(out_abs, "meta.json"))):
+            shutil.rmtree(work_dir, ignore_errors=True)
+            raise ValueError(
+                f"{out_dir}: exists and is not a database directory "
+                "(no meta.json); refusing to replace it")
+        os.rename(out_abs, backup)
+        os.rename(work_dir, out_abs)
+        shutil.rmtree(backup, ignore_errors=True)
+    else:
+        os.rename(work_dir, out_abs)
+    return Database(out_dir, db.frames, db.parents, db.metrics,
+                    db.profile_ids, db.stats)
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+def summarize(db: Database, in_dirs: Sequence[str]) -> str:
+    """Deterministic post-merge report (golden-tested): counts only, no
+    timings or absolute paths."""
+    nnz = sum(len(pv.values) for pv in read_pms(db.pms_path()))
+    lines = [
+        f"MERGE  {len(in_dirs)} database(s) -> "
+        f"{os.path.basename(os.path.normpath(db.out_dir))}",
+        f"  inputs:   "
+        + " ".join(sorted(os.path.basename(os.path.normpath(d))
+                          for d in in_dirs)),
+        f"  profiles: {len(db.profile_ids)}",
+        f"  contexts: {len(db.frames)}",
+        f"  metrics:  {len(db.metrics)}",
+        f"  nnz:      {nnz}",
+    ]
+    tpath = db.trace_db_path()
+    if os.path.exists(tpath):
+        from repro.traceview.tracedb import TraceDB
+        tdb = TraceDB(tpath)
+        lines.append(f"  trace.db: {len(tdb)} line(s), "
+                     f"{tdb.n_events} event(s)")
+    else:
+        lines.append("  trace.db: (none)")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.merge",
+        description="Merge databases produced by aggregate() into one, "
+                    "byte-identical to a one-shot aggregation over the "
+                    "union of their profiles.")
+    ap.add_argument("inputs", nargs="+", help="input database directories")
+    ap.add_argument("-o", "--out", required=True,
+                    help="output database directory")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="writer worker threads (default 4)")
+    ap.add_argument("--no-trace-db", action="store_true",
+                    help="skip merging the shards' trace.db files (any "
+                         "pre-existing OUT/trace.db is removed — its ctx "
+                         "ids would be stale against the merged tree)")
+    args = ap.parse_args(argv)
+    db = merge_databases(args.inputs, args.out, n_workers=args.workers,
+                         trace_db=not args.no_trace_db)
+    print(summarize(db, args.inputs))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

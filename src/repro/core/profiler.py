@@ -51,7 +51,8 @@ class Profiler:
                  = None, tracing: bool = True, n_tracing_threads: int = 1,
                  sample_rate_hz: float = 1e6, instrument: bool = False,
                  rank: int = 0, clock: Callable[[], int] = time.monotonic_ns,
-                 rng_seed: Optional[int] = None, unwind: bool = True):
+                 rng_seed: Optional[int] = None, unwind: bool = True,
+                 tag: Optional[str] = None):
         self.out_dir = out_dir
         os.makedirs(out_dir, exist_ok=True)
         self.registry = registry or default_registry()
@@ -61,6 +62,12 @@ class Profiler:
         self.rank = rank
         self.clock = clock
         self.unwind = unwind
+        # continuous profiling (ISSUE 4): an optional measurement tag
+        # (epoch / job segment) that lands in every profile & trace
+        # identity and in the file names, so successive measurement
+        # windows of one rank stay distinct through aggregation,
+        # incremental merge, and the trace.db line index
+        self.tag = tag
         self._rng = (np.random.default_rng(rng_seed)
                      if rng_seed is not None else None)
         self._corr = itertools.count(1)
@@ -294,11 +301,18 @@ class Profiler:
         """Writes all profiles + traces.  Returns {label: path}."""
         out: Dict[str, str] = {}
         mods = [self._module_names[m] for m in sorted(self._modules)]
+        fp = f"{self.tag}_" if self.tag else ""
+
+        def identity(**kw) -> Dict[str, object]:
+            ident = {"host": self._host, "rank": self.rank, **kw}
+            if self.tag is not None:
+                ident["tag"] = self.tag
+            return ident
+
         for i, (tid, st) in enumerate(sorted(self._threads.items())):
-            ident = {"host": self._host, "rank": self.rank, "thread": i,
-                     "type": "cpu"}
+            ident = identity(thread=i, type="cpu")
             path = os.path.join(self.out_dir,
-                                f"profile_r{self.rank}_t{i}.rpro")
+                                f"profile_{fp}r{self.rank}_t{i}.rpro")
             write_profile(path, st.cct, self.registry, ident, mods)
             out[f"cpu_{i}"] = path
             tw = TraceWriter(path.replace(".rpro", ".rtrc"), ident)
@@ -309,20 +323,19 @@ class Profiler:
         with self._stream_lock:
             streams = dict(self._stream_ccts)
         for sid, cct in sorted(streams.items()):
-            ident = {"host": self._host, "rank": self.rank, "stream": sid,
-                     "type": "gpu"}
+            ident = identity(stream=sid, type="gpu")
             path = os.path.join(self.out_dir,
-                                f"profile_r{self.rank}_s{sid}.rpro")
+                                f"profile_{fp}r{self.rank}_s{sid}.rpro")
             write_profile(path, cct, self.registry, ident, mods)
             out[f"gpu_{sid}"] = path
         # GPU stream traces from the tracing threads
         for tt in self._monitor._trace_threads:
             for sid, recs in tt.records.items():
-                ident = {"host": self._host, "rank": self.rank,
-                         "stream": sid, "type": "gpu"}
+                ident = identity(stream=sid, type="gpu")
                 tw = TraceWriter(
                     os.path.join(self.out_dir,
-                                 f"trace_r{self.rank}_s{sid}.rtrc"), ident)
+                                 f"trace_{fp}r{self.rank}_s{sid}.rtrc"),
+                    ident)
                 arr = np.asarray(recs, np.uint64).reshape(-1, 3)
                 tw.append_many(arr[:, 0], arr[:, 1], arr[:, 2])
                 tw.close()

@@ -258,6 +258,50 @@ class CMSReader:
             return float(vals[k])
         return 0.0
 
+    def plane_triplets(self, ctx: int
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """One context plane as ``(profile, metric, value)`` COO arrays,
+        in stored (metric-major) order — copies, safe to keep after the
+        reader goes away."""
+        plane = self._plane(ctx)
+        if plane is None:
+            z = np.zeros(0, np.int64)
+            return z, z, np.zeros(0, np.float64)
+        midxs, pids, vals = plane
+        starts = midxs["s"].astype(np.int64)     # last entry = sentinel nnz
+        counts = starts[1:] - starts[:-1]
+        mets = np.repeat(midxs["m"][:-1].astype(np.int64), counts)
+        return pids.astype(np.int64), mets, np.array(vals, np.float64)
+
+
+def read_cms(path: str) -> List[ProfileValues]:
+    """Full CMS round-trip: reconstruct every profile's sparse values from
+    the CCT-major cube (per-profile arrays in row-major (ctx, metric)
+    order — the order ``aggregate`` streams them in)."""
+    r = CMSReader(path)
+    ctx_l, pid_l, met_l, val_l = [], [], [], []
+    for ctx in r.contexts().tolist():
+        pids, mets, vals = r.plane_triplets(int(ctx))
+        pid_l.append(pids)
+        met_l.append(mets)
+        val_l.append(vals)
+        ctx_l.append(np.full(len(pids), int(ctx), np.int64))
+    if not ctx_l:
+        return []
+    ctx = np.concatenate(ctx_l)
+    pid = np.concatenate(pid_l)
+    met = np.concatenate(met_l)
+    val = np.concatenate(val_l)
+    order = np.lexsort((met, ctx, pid))
+    ctx, pid, met, val = ctx[order], pid[order], met[order], val[order]
+    upids, starts = np.unique(pid, return_index=True)
+    bounds = np.append(starts, len(pid))
+    return [ProfileValues(int(upids[i]),
+                          ctx[bounds[i]:bounds[i + 1]].astype(np.uint32),
+                          met[bounds[i]:bounds[i + 1]].astype(np.uint32),
+                          val[bounds[i]:bounds[i + 1]])
+            for i in range(len(upids))]
+
 
 # =========================================================================
 # PMS
@@ -364,6 +408,39 @@ class PMSReader:
             return {}
         lo, hi = rows[j][1], rows[j + 1][1]
         return {int(m): float(v) for m, v in zip(mets[lo:hi], vals[lo:hi])}
+
+    def profile_ids(self) -> np.ndarray:
+        return self._pids
+
+    def profile_values(self, profile: int) -> Optional[ProfileValues]:
+        """One profile's full sparse values, bitwise as written: the plane
+        is stored row-major in (ctx, metric), which is exactly the order
+        ``aggregate`` emits, so PMS -> ``profile_values`` -> ``write_pms``
+        round-trips byte-identically.  Arrays are copies (safe to keep
+        while the underlying file is rewritten, e.g. an in-place
+        incremental merge)."""
+        plane = self.profile_plane(profile)
+        if plane is None:
+            return None
+        rows, mets, vals = plane
+        counts = np.diff([r[1] for r in rows])
+        ctx = np.repeat(np.array([r[0] for r in rows[:-1]], np.int64),
+                        counts)
+        return ProfileValues(profile, ctx.astype(np.uint32),
+                             np.array(mets, np.uint32),
+                             np.array(vals, np.float64))
+
+
+def read_pms(path: str) -> List[ProfileValues]:
+    """Full PMS round-trip: every profile's sparse values, ascending
+    profile id (the canonical order ``aggregate`` assigned)."""
+    r = PMSReader(path)
+    out = []
+    for pid in r.profile_ids().tolist():
+        pv = r.profile_values(int(pid))
+        if pv is not None:
+            out.append(pv)
+    return out
 
 
 def dense_cube_nbytes(n_profiles: int, n_ctx: int, n_metrics: int) -> int:

@@ -54,15 +54,25 @@ def _line_key(identity: dict) -> tuple:
             json.dumps(identity, sort_keys=True))
 
 
-def _load_sources(sources: Union[str, Sequence[str]]) -> List[TraceData]:
+Source = Union[str, TraceData]
+
+
+def _load_sources(sources: Union[Source, Sequence[Source]]
+                  ) -> List[TraceData]:
     """Expand sources into trace lines.  A source is a measurement
-    directory (all ``*.rtrc`` inside), a single ``.rtrc`` file, or an
-    existing ``trace.db`` (whose lines re-merge unchanged)."""
-    if isinstance(sources, str):
+    directory (all ``*.rtrc`` inside), a single ``.rtrc`` file, an
+    existing ``trace.db`` (whose lines re-merge unchanged), or an
+    in-memory ``TraceData`` line (the database merge hands remapped
+    lines straight in — repro.core.merge)."""
+    if isinstance(sources, (str, TraceData)):
         sources = [sources]
     lines: List[TraceData] = []
     for src in sources:
-        if os.path.isdir(src):
+        if isinstance(src, TraceData):
+            # materialized by the caller when the arrays view a file this
+            # build may overwrite (sorted_by_start copies only if unsorted)
+            lines.append(src)
+        elif os.path.isdir(src):
             for p in sorted(glob.glob(os.path.join(src, "*.rtrc"))):
                 lines.append(read_trace(p))
         elif src.endswith(".rtrc"):
@@ -76,7 +86,8 @@ def _load_sources(sources: Union[str, Sequence[str]]) -> List[TraceData]:
     return lines
 
 
-def build_db(sources: Union[str, Sequence[str]], out_path: str) -> "TraceDB":
+def build_db(sources: Union[Source, Sequence[Source]],
+             out_path: str) -> "TraceDB":
     """Merge per-identity trace files into one seekable ``trace.db``."""
     lines = [sorted_by_start(td) for td in _load_sources(sources)]
     lines.sort(key=lambda td: _line_key(td.identity))

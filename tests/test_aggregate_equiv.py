@@ -8,6 +8,13 @@ production pipeline (sparse COO + level-order sweep + communication-free
 workers) must reproduce it **bit for bit** — stats arrays via
 ``np.array_equal``, CMS/PMS cubes and converted traces via file-byte
 comparison — on randomized synthetic CCTs and under parallel execution.
+
+Since ISSUE 4 the database is *canonical* (ids independent of
+n_ranks/path order, see docs/aggregation.md): the reference applies the
+same shared ``canonical_order`` / ``profile_sort_key`` renumbering, so
+what this file pins is everything else — the sparse level-order sweep,
+the lock-free parallel fold, and the cube/trace writers — against the
+dense serial algorithms.
 """
 import json
 import os
@@ -15,7 +22,9 @@ import os
 import numpy as np
 import pytest
 
-from repro.core.aggregate import Database, GlobalTree, aggregate
+from repro.core.aggregate import (Database, GlobalTree, aggregate,
+                                  apply_order, canonical_order,
+                                  profile_sort_key)
 from repro.core.cct import CCT, Frame, GPU_OP, HOST, PLACEHOLDER
 from repro.core.metrics import default_registry
 from repro.core.profmt import read_profile, write_profile
@@ -124,31 +133,31 @@ def ref_aggregate(profile_paths, n_ranks):
     root = rank_results[0][0]
     mappings = [None] + [root.merge_tree(t)
                          for t, _ in rank_results[1:]]
+    # canonical renumbering: the shared pure functions, applied to the
+    # reference tree too — both sides must land on the same canonical ids
+    # (the ids themselves are exercised by the merge/property suites)
+    new_id = canonical_order(root.frames, root.parents)
+    frames_c, parents_c = apply_order(root.frames, root.parents, new_id)
     all_profiles = []
     for (tree, profs), conv in zip(rank_results, mappings):
         for path, prof, mapping in profs:
             gmap = mapping if conv is None else conv[mapping]
-            all_profiles.append((path, prof, gmap))
+            all_profiles.append((path, prof, new_id[gmap]))
 
     metrics = all_profiles[0][1].metrics if all_profiles else []
     n_metrics = len(metrics)
-    n_ctx = len(root.frames)
-    parents = np.asarray(root.parents)
+    n_ctx = len(frames_c)
+    parents = parents_c
 
-    acc = {"sum": np.zeros((n_ctx, n_metrics)),
-           "min": np.full((n_ctx, n_metrics), np.inf),
-           "max": np.full((n_ctx, n_metrics), -np.inf),
-           "sumsq": np.zeros((n_ctx, n_metrics)),
-           "count": np.zeros((n_ctx, n_metrics))}
-    pvals, identities = [], {}
-    for pidx, (path, prof, gmap) in enumerate(all_profiles):
+    items = []
+    for path, prof, gmap in all_profiles:
         dense = np.zeros((n_ctx, n_metrics))
         node_of_value = np.zeros(len(prof.values), np.int64)
         for nid, start, count in prof.ranges:
             node_of_value[start:start + count] = gmap[int(nid)]
         np.add.at(dense, (node_of_value, prof.value_mids.astype(np.int64)),
                   prof.values)
-        # dense reverse-id sweep: children created after parents, so each
+        # dense reverse-id sweep: canonical ids stay topological, so each
         # row folds into its parent exactly once, children in decreasing id
         for gid in range(n_ctx - 1, 0, -1):
             p = parents[gid]
@@ -156,6 +165,17 @@ def ref_aggregate(profile_paths, n_ranks):
                 dense[p] += dense[gid]
         nz_ctx, nz_met = np.nonzero(dense)
         vals = dense[nz_ctx, nz_met]
+        items.append((prof.identity, nz_ctx, nz_met, vals))
+
+    # canonical profile order (shared key), then the serial fold
+    items.sort(key=lambda it: profile_sort_key(*it))
+    acc = {"sum": np.zeros((n_ctx, n_metrics)),
+           "min": np.full((n_ctx, n_metrics), np.inf),
+           "max": np.full((n_ctx, n_metrics), -np.inf),
+           "sumsq": np.zeros((n_ctx, n_metrics)),
+           "count": np.zeros((n_ctx, n_metrics))}
+    pvals, identities = [], {}
+    for pidx, (ident, nz_ctx, nz_met, vals) in enumerate(items):
         acc["sum"][nz_ctx, nz_met] += vals
         np.minimum.at(acc["min"], (nz_ctx, nz_met), vals)
         np.maximum.at(acc["max"], (nz_ctx, nz_met), vals)
@@ -163,7 +183,7 @@ def ref_aggregate(profile_paths, n_ranks):
         acc["count"][nz_ctx, nz_met] += 1
         pvals.append(ProfileValues(pidx, nz_ctx.astype(np.uint32),
                                    nz_met.astype(np.uint32), vals))
-        identities[pidx] = prof.identity
+        identities[pidx] = ident
 
     count = np.maximum(acc["count"], 1)
     mean = acc["sum"] / count
@@ -177,7 +197,7 @@ def ref_aggregate(profile_paths, n_ranks):
              "cov": np.where(mean != 0,
                              std / np.maximum(np.abs(mean), 1e-30), 0.0),
              "count": acc["count"]}
-    return root, stats, pvals, all_profiles
+    return (frames_c, parents_c), stats, pvals, all_profiles
 
 
 # --------------------------------------------------------------------------
@@ -190,11 +210,12 @@ def test_bitwise_equivalence(tmp_path, seed, n_ranks, n_threads):
     out = str(tmp_path / "db")
     db = aggregate(paths, out, n_ranks=n_ranks, n_threads=n_threads,
                    trace_paths=traces)
-    root, stats, pvals, all_profiles = ref_aggregate(paths, n_ranks)
+    (frames_c, parents_c), stats, pvals, all_profiles = \
+        ref_aggregate(paths, n_ranks)
 
-    # tree identity: same frames in the same creation order
-    assert db.frames == root.frames
-    assert list(db.parents) == root.parents
+    # tree identity: same frames in the same canonical order
+    assert db.frames == frames_c
+    assert list(db.parents) == list(parents_c)
 
     # stats arrays: bitwise equal
     for k, ref in stats.items():

@@ -35,3 +35,15 @@ def test_multiple_stages_reported_independently():
 
 def test_counters_benchmark_is_tracked():
     assert "counters" in ALL and "counters" in TRACKED
+
+
+def test_merge_benchmark_is_tracked_with_budget():
+    """ISSUE 4: bench_merge rides the sweep (and --small smoke in CI),
+    persists BENCH_merge.json, and enforces its merge-stage budget."""
+    from benchmarks import bench_merge
+    assert "merge" in ALL and "merge" in TRACKED
+    assert bench_merge.MERGE_BUDGET_S > 0
+    msgs = budget_regressions("merge", {
+        "merge_under_budget": False,
+        "merge_budget_s": bench_merge.MERGE_BUDGET_S})
+    assert len(msgs) == 1 and "merge" in msgs[0]

@@ -1,0 +1,415 @@
+"""Incremental & sharded database merge (ISSUE 4 tentpole).
+
+The acceptance contract: ``merge_databases`` over *any* sharding of a
+measurement directory produces a database — tree, stats, cms, pms,
+trace.db — byte-identical to a one-shot ``aggregate()`` over the union.
+This file pins that with fixed shardings (including shards built with
+*different* ``n_ranks``), in-place incremental extension, CLI golden
+output, and the error paths; tests/test_merge_properties.py adds the
+randomized merge-algebra properties on top.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.aggregate import Database, aggregate, canonical_order
+from repro.core.cct import Frame
+from repro.core.merge import LoadedShard, main as merge_main, \
+    merge_databases, summarize
+from repro.core.sparse import read_pms
+from test_aggregate_equiv import synth_inputs
+from test_goldens import check_golden
+
+DB_FILES = ("stats.npz", "metrics.cms", "metrics.pms", "trace.db")
+META_KEYS = ("frames", "parents", "metrics", "profiles", "cms", "pms")
+
+
+def db_bytes(out_dir, files=DB_FILES):
+    out = {}
+    for fn in files:
+        p = os.path.join(out_dir, fn)
+        out[fn] = open(p, "rb").read() if os.path.exists(p) else None
+    return out
+
+
+def meta_of(out_dir):
+    with open(os.path.join(out_dir, "meta.json")) as f:
+        meta = json.load(f)
+    return {k: meta[k] for k in META_KEYS}
+
+
+def assert_db_identical(got_dir, want_dir):
+    got, want = db_bytes(got_dir), db_bytes(want_dir)
+    for fn in DB_FILES:
+        assert got[fn] == want[fn], f"{fn} diverged"
+    assert meta_of(got_dir) == meta_of(want_dir)
+
+
+def traces_of(paths):
+    return [p.replace(".rpro", ".rtrc") for p in paths]
+
+
+def build_shards(tmp_path, paths, split, **kw):
+    """Aggregate each shard of ``split`` into its own database dir."""
+    dirs = []
+    for i, sp in enumerate(split):
+        d = str(tmp_path / f"shard{i}")
+        traces = [t for t in traces_of(sp) if os.path.exists(t)]
+        aggregate(sp, d, trace_paths=traces,
+                  **{"n_ranks": i + 1, "n_threads": 2, **kw})
+        dirs.append(d)
+    return dirs
+
+
+# --------------------------------------------------------------------------
+# The pinned multi-shard round trip (acceptance criterion)
+# --------------------------------------------------------------------------
+def test_shard_then_merge_is_byte_identical_to_one_shot(tmp_path):
+    paths, traces = synth_inputs(tmp_path, seed=40, n_profiles=7)
+    one = str(tmp_path / "one")
+    aggregate(paths, one, trace_paths=traces)
+    # interleaved 3-way sharding; every shard aggregated with a DIFFERENT
+    # n_ranks (the canonical contract makes that irrelevant)
+    dirs = build_shards(tmp_path, paths,
+                        [paths[0::3], paths[1::3], paths[2::3]])
+    merged = str(tmp_path / "merged")
+    merge_databases(dirs, merged)
+    assert_db_identical(merged, one)
+
+
+def test_merge_is_shard_order_invariant(tmp_path):
+    paths, _ = synth_inputs(tmp_path, seed=41, n_profiles=6)
+    dirs = build_shards(tmp_path, paths, [paths[:2], paths[2:4], paths[4:]])
+    a = str(tmp_path / "a")
+    b = str(tmp_path / "b")
+    merge_databases(dirs, a)
+    merge_databases(list(reversed(dirs)), b)
+    assert db_bytes(a) == db_bytes(b)
+    assert meta_of(a) == meta_of(b)
+
+
+def test_merge_is_associative(tmp_path):
+    paths, _ = synth_inputs(tmp_path, seed=42, n_profiles=6)
+    dirs = build_shards(tmp_path, paths, [paths[:2], paths[2:4], paths[4:]])
+    ab = str(tmp_path / "ab")
+    merge_databases(dirs[:2], ab)
+    nested = str(tmp_path / "nested")
+    merge_databases([ab, dirs[2]], nested)
+    flat = str(tmp_path / "flat")
+    merge_databases(dirs, flat)
+    assert db_bytes(nested) == db_bytes(flat)
+    assert meta_of(nested) == meta_of(flat)
+
+
+def test_merge_single_db_is_idempotent(tmp_path):
+    paths, traces = synth_inputs(tmp_path, seed=43, n_profiles=3)
+    one = str(tmp_path / "one")
+    aggregate(paths, one, trace_paths=traces)
+    again = str(tmp_path / "again")
+    merge_databases([one], again)
+    assert_db_identical(again, one)
+
+
+def test_aggregate_is_canonical_across_configs(tmp_path):
+    """The contract merge stands on: one-shot bytes are a pure function
+    of the profile set — n_ranks/n_threads/path order all irrelevant."""
+    paths, traces = synth_inputs(tmp_path, seed=44, n_profiles=6)
+    a = str(tmp_path / "a")
+    aggregate(paths, a, n_ranks=1, n_threads=1, trace_paths=traces)
+    b = str(tmp_path / "b")
+    aggregate(list(reversed(paths)), b, n_ranks=4, n_threads=4,
+              trace_paths=list(reversed(traces)))
+    assert db_bytes(a) == db_bytes(b)
+    assert meta_of(a) == meta_of(b)
+
+
+def test_unmapped_traces_compose_byte_identically(tmp_path):
+    """A trace with no matching profile passes through aggregate() with
+    raw ctx ids and a ``ctx_unmapped`` identity flag; merge must copy
+    such lines verbatim (remapping ids that were never database ctx ids
+    would diverge from the one-shot)."""
+    from repro.core.trace import TraceWriter
+    from repro.traceview.tracedb import TraceDB
+    paths, traces = synth_inputs(tmp_path, seed=52, n_profiles=4)
+    for i in range(2):   # orphan traces, one per shard
+        tw = TraceWriter(str(tmp_path / f"orphan{i}.rtrc"),
+                         {"rank": 10 + i, "stream": 0, "type": "gpu"})
+        tw.append(0, 50, 12345)      # not a database ctx id
+        tw.close()
+        traces.append(tw.path)
+    one = str(tmp_path / "one")
+    aggregate(paths, one, trace_paths=traces)
+    split = [paths[:2], paths[2:]]
+    dirs = []
+    for i, sp in enumerate(split):
+        d = str(tmp_path / f"shard{i}")
+        aggregate(sp, d, trace_paths=traces_of(sp)
+                  + [str(tmp_path / f"orphan{i}.rtrc")])
+        dirs.append(d)
+    merged = str(tmp_path / "merged")
+    merge_databases(dirs, merged)
+    assert_db_identical(merged, one)
+    tdb = TraceDB(os.path.join(merged, "trace.db"))
+    flagged = [ln for ln in tdb.lines if ln.identity.get("ctx_unmapped")]
+    assert len(flagged) == 2
+    # raw ids preserved verbatim
+    i = tdb.lines.index(flagged[0])
+    assert list(tdb.ctx(i)) == [12345]
+
+
+# --------------------------------------------------------------------------
+# Incremental mode
+# --------------------------------------------------------------------------
+def test_incremental_aggregate_extends_in_place(tmp_path):
+    paths, traces = synth_inputs(tmp_path, seed=45, n_profiles=6)
+    one = str(tmp_path / "one")
+    aggregate(paths, one, trace_paths=traces)
+    inc = str(tmp_path / "inc")
+    aggregate(paths[:4], inc, trace_paths=traces_of(paths[:4]))
+    timing = {}
+    db = aggregate(paths[4:], inc, base_db=inc,
+                   trace_paths=traces_of(paths[4:]), timing=timing)
+    assert_db_identical(inc, one)
+    assert len(db.profile_ids) == 6
+    assert "incremental_s" in timing
+
+
+def test_incremental_respects_trace_db_flag(tmp_path):
+    """trace_db=False must flow through the incremental path: no fresh
+    trace.db is built, and a stale one (pre-merge ctx ids) is removed
+    rather than left behind."""
+    paths, traces = synth_inputs(tmp_path, seed=53, n_profiles=4)
+    inc = str(tmp_path / "inc")
+    aggregate(paths[:2], inc, trace_paths=traces_of(paths[:2]))
+    assert os.path.exists(os.path.join(inc, "trace.db"))
+    aggregate(paths[2:], inc, base_db=inc,
+              trace_paths=traces_of(paths[2:]), trace_db=False)
+    assert not os.path.exists(os.path.join(inc, "trace.db"))
+
+
+def test_in_place_merge_leaves_no_staging_droppings(tmp_path):
+    """In-place extension stages outputs in a sibling temp dir and swaps
+    them in with per-file renames; nothing extra may remain."""
+    paths, traces = synth_inputs(tmp_path, seed=54, n_profiles=4)
+    inc = str(tmp_path / "inc")
+    aggregate(paths[:2], inc, trace_paths=traces_of(paths[:2]))
+    before = set(os.listdir(tmp_path))
+    merged_again = merge_databases(
+        [inc, build_shards(tmp_path, paths, [paths[2:]])[0]], inc)
+    assert len(merged_again.profile_ids) == 4
+    after = set(os.listdir(tmp_path))
+    assert not any(n.startswith(".merge_staging_") for n in after)
+    assert after - before == {"shard0"}
+
+
+def test_incremental_aggregate_into_fresh_dir(tmp_path):
+    paths, traces = synth_inputs(tmp_path, seed=46, n_profiles=4)
+    one = str(tmp_path / "one")
+    aggregate(paths, one, trace_paths=traces)
+    base = str(tmp_path / "base")
+    aggregate(paths[:2], base, trace_paths=traces_of(paths[:2]))
+    out = str(tmp_path / "extended")
+    aggregate(paths[2:], out, base_db=Database.load(base),
+              trace_paths=traces_of(paths[2:]))
+    assert_db_identical(out, one)
+    # the base is untouched
+    assert len(Database.load(base).profile_ids) == 2
+
+
+# --------------------------------------------------------------------------
+# PMS/CMS reader round trips on fresh and merged databases
+# --------------------------------------------------------------------------
+def test_pms_reader_roundtrips_merged_database(tmp_path):
+    from repro.core.sparse import read_cms, write_pms
+    paths, _ = synth_inputs(tmp_path, seed=47, n_profiles=5,
+                            with_traces=False)
+    dirs = build_shards(tmp_path, paths, [paths[:2], paths[2:]])
+    merged = str(tmp_path / "merged")
+    db = merge_databases(dirs, merged)
+    pvals = read_pms(db.pms_path())
+    assert [pv.profile_id for pv in pvals] == list(range(5))
+    # write-back of what the reader returned is byte-identical
+    back = str(tmp_path / "back.pms")
+    write_pms(back, pvals, n_workers=1)
+    assert open(back, "rb").read() == \
+        open(db.pms_path(), "rb").read()
+    # and the CMS view of the same cube carries identical triplets
+    cvals = {pv.profile_id: pv for pv in read_cms(db.cms_path())}
+    for pv in pvals:
+        cv = cvals[pv.profile_id]
+        assert np.array_equal(pv.ctx, cv.ctx)
+        assert np.array_equal(pv.metric, cv.metric)
+        assert np.array_equal(pv.values, cv.values)
+
+
+# --------------------------------------------------------------------------
+# Errors and edges
+# --------------------------------------------------------------------------
+def test_merge_requires_inputs():
+    with pytest.raises(ValueError, match="at least one"):
+        merge_databases([], "nowhere")
+
+
+def test_merge_rejects_mismatched_metrics(tmp_path):
+    from repro.core.cct import CCT, Frame, HOST
+    from repro.core.metrics import MetricRegistry
+    from repro.core.profmt import write_profile
+    paths, _ = synth_inputs(tmp_path, seed=48, n_profiles=2,
+                            with_traces=False)
+    a = str(tmp_path / "a")
+    aggregate(paths[:1], a)
+    reg = MetricRegistry()
+    reg.register_kind("weird", ("only",))
+    cct = CCT()
+    cct.insert_path([Frame(HOST, "f", "x.py", 1)]).metrics.add(
+        reg.kind("weird"), "only", 1.0)
+    p = str(tmp_path / "weird.rpro")
+    write_profile(p, cct, reg, {"rank": 9}, [])
+    b = str(tmp_path / "b")
+    aggregate([p], b)
+    with pytest.raises(ValueError, match="metric columns"):
+        merge_databases([a, b], str(tmp_path / "out"))
+
+
+def test_merge_with_empty_database(tmp_path):
+    paths, _ = synth_inputs(tmp_path, seed=49, n_profiles=2,
+                            with_traces=False)
+    a = str(tmp_path / "a")
+    aggregate(paths, a)
+    e = str(tmp_path / "empty")
+    aggregate([], e)
+    out = str(tmp_path / "out")
+    db = merge_databases([e, a], out)
+    assert len(db.profile_ids) == 2
+    assert db.metrics == Database.load(a).metrics
+    both_empty = merge_databases([e, e], str(tmp_path / "out2"))
+    assert len(both_empty.frames) == 1 and both_empty.metrics == []
+
+
+def test_merge_duplicate_profiles_accumulate_as_multiset(tmp_path):
+    """Merging a database with itself doubles every profile (documented
+    multiset semantics) — sums double, count doubles, min/max hold."""
+    paths, _ = synth_inputs(tmp_path, seed=50, n_profiles=2,
+                            with_traces=False)
+    a = str(tmp_path / "a")
+    db_a = aggregate(paths, a)
+    out = str(tmp_path / "out")
+    db = merge_databases([a, a], out)
+    assert len(db.profile_ids) == 4
+    assert np.array_equal(db.stats["sum"], 2 * db_a.stats["sum"])
+    assert np.array_equal(db.stats["count"], 2 * db_a.stats["count"])
+    assert np.array_equal(db.stats["min"], db_a.stats["min"])
+    assert np.array_equal(db.stats["max"], db_a.stats["max"])
+
+
+def test_merge_refuses_to_replace_non_database_dir(tmp_path):
+    """The commit step swaps whole directories; a typo'd -o pointing at
+    unrelated files must error out, not vaporize them."""
+    paths, _ = synth_inputs(tmp_path, seed=55, n_profiles=2,
+                            with_traces=False)
+    a = str(tmp_path / "a")
+    aggregate(paths, a)
+    victim = tmp_path / "victim"
+    victim.mkdir()
+    (victim / "precious.txt").write_text("keep me")
+    with pytest.raises(ValueError, match="not a database directory"):
+        merge_databases([a], str(victim))
+    assert (victim / "precious.txt").read_text() == "keep me"
+    assert not any(n.startswith(".merge_staging_")
+                   for n in os.listdir(tmp_path))
+
+
+def test_loaded_shard_rejects_torn_database(tmp_path):
+    paths, _ = synth_inputs(tmp_path, seed=51, n_profiles=2,
+                            with_traces=False)
+    a = str(tmp_path / "a")
+    aggregate(paths, a)
+    meta_path = os.path.join(a, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["profiles"]["99"] = {"rank": 99}
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="torn"):
+        LoadedShard(a)
+
+
+def test_canonical_order_properties():
+    """Topological + child-order-by-frame-key, on a hand-built tree."""
+    frames = [Frame("root", "<program root>"),
+              Frame("host", "z", "b.py", 1),   # inserted before "a"
+              Frame("host", "a", "a.py", 1),
+              Frame("host", "k", "c.py", 2)]   # child of z
+    parents = np.array([-1, 0, 0, 1])
+    new_id = canonical_order(frames, parents)
+    # "a" sorts before "z" at level 1; "k" fills level 2
+    assert list(new_id) == [0, 2, 1, 3]
+
+
+# --------------------------------------------------------------------------
+# CLI (+ golden summary output)
+# --------------------------------------------------------------------------
+@pytest.fixture()
+def cli_shards(tmp_path):
+    """Fully deterministic shards for the CLI golden (fixed identities,
+    fixed values — no RNG)."""
+    from repro.core.cct import CCT, Frame, HOST, PLACEHOLDER
+    from repro.core.metrics import default_registry
+    from repro.core.profmt import write_profile
+    from repro.core.trace import TraceWriter
+    reg = default_registry()
+    paths = []
+    for r in range(4):
+        cct = CCT()
+        main_n = cct.insert_path([Frame(HOST, "main", "app.py", 1)])
+        ph = cct.get_or_insert(main_n,
+                               Frame(PLACEHOLDER, "kernel:train", "0", 0))
+        ph.metrics.add(reg.kind("gpu_kernel"), "invocations", r + 1.0)
+        ph.metrics.add(reg.kind("gpu_kernel"), "time_ns", 100.0 * (r + 1))
+        p = str(tmp_path / f"profile_r{r}_t0.rpro")
+        write_profile(p, cct, reg,
+                      {"rank": r, "thread": 0, "type": "cpu"}, [])
+        tw = TraceWriter(p.replace(".rpro", ".rtrc"),
+                         {"rank": r, "thread": 0, "type": "cpu"})
+        tw.append(0, 100, main_n.node_id)
+        tw.append(100, 200, ph.node_id)
+        tw.close()
+        paths.append(p)
+    dirs = []
+    for i in range(2):
+        sp = paths[2 * i:2 * i + 2]
+        d = str(tmp_path / f"shard_{i}")
+        aggregate(sp, d, trace_paths=traces_of(sp))
+        dirs.append(d)
+    return dirs
+
+
+def test_merge_cli_summary_golden(cli_shards, tmp_path, capsys,
+                                  update_goldens):
+    out = str(tmp_path / "merged_db")
+    rc = merge_main([*cli_shards, "-o", out])
+    assert rc == 0
+    text = capsys.readouterr().out.rstrip("\n")
+    check_golden("merge_cli_summary.txt", text, update_goldens)
+    assert os.path.isdir(out)
+
+
+def test_merge_cli_no_trace_db(cli_shards, tmp_path, capsys):
+    out = str(tmp_path / "merged_db")
+    rc = merge_main([*cli_shards, "-o", out, "--no-trace-db",
+                     "--workers", "1"])
+    assert rc == 0
+    assert not os.path.exists(os.path.join(out, "trace.db"))
+    assert "trace.db: (none)" in capsys.readouterr().out
+
+
+def test_summarize_counts_match_database(cli_shards, tmp_path):
+    out = str(tmp_path / "merged_db")
+    db = merge_databases(cli_shards, out)
+    text = summarize(db, cli_shards)
+    assert f"profiles: {len(db.profile_ids)}" in text
+    assert f"contexts: {len(db.frames)}" in text
+    nnz = sum(len(pv.values) for pv in read_pms(db.pms_path()))
+    assert f"nnz:      {nnz}" in text

@@ -1,0 +1,125 @@
+"""Merge-algebra property tests (ISSUE 4 satellite).
+
+The merge contract, stated as algebra over randomized profile sets:
+
+- **completeness**: for ANY partition of the profiles into shards, in ANY
+  shard order, shard-then-merge is byte-identical to one-shot
+  ``aggregate()`` over the union;
+- **associativity**: any merge tree over the shards lands on the same
+  bytes as the flat merge;
+- **incrementality**: ``aggregate(new, base_db=...)`` at any split point
+  equals the one-shot.
+
+Hypothesis draws the profile set (seed), the shard assignment, and the
+shard permutation; the pinned ``test_properties_hold_on_fixed_example``
+exercises the same bodies without hypothesis so the logic runs in
+minimal environments too (the ``@given`` tests skip there, see
+tests/hypothesis_compat.py).
+"""
+import os
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core.aggregate import aggregate
+from repro.core.merge import merge_databases
+from test_aggregate_equiv import synth_inputs
+from test_merge import db_bytes, meta_of, traces_of
+
+
+def _build(tmp, seed, n_profiles):
+    os.makedirs(tmp, exist_ok=True)
+    paths, traces = synth_inputs(tmp, seed=seed, n_profiles=n_profiles)
+    one = str(tmp / "one")
+    aggregate(paths, one, trace_paths=traces)
+    return paths, one
+
+
+def _aggregate_shards(tmp, paths, shard_of):
+    """Aggregate each shard (profile i -> shard shard_of[i]) with a
+    shard-dependent n_ranks, so canonicalization is doing real work."""
+    shards = {}
+    for i, s in enumerate(shard_of):
+        shards.setdefault(s, []).append(paths[i])
+    dirs = []
+    for s, sp in sorted(shards.items()):
+        d = str(tmp / f"shard{s}")
+        aggregate(sp, d, n_ranks=1 + s % 3, n_threads=1 + s % 2,
+                  trace_paths=traces_of(sp))
+        dirs.append(d)
+    return dirs
+
+
+def check_sharding_invariance(tmp, seed, shard_of, reverse):
+    paths, one = _build(tmp, seed, n_profiles=len(shard_of))
+    dirs = _aggregate_shards(tmp, paths, shard_of)
+    if reverse:
+        dirs = list(reversed(dirs))
+    merged = str(tmp / "merged")
+    merge_databases(dirs, merged)
+    assert db_bytes(merged) == db_bytes(one)
+    assert meta_of(merged) == meta_of(one)
+
+
+def check_associativity(tmp, seed, shard_of):
+    paths, one = _build(tmp, seed, n_profiles=len(shard_of))
+    dirs = _aggregate_shards(tmp, paths, shard_of)
+    # left fold two at a time vs flat N-way merge
+    acc = dirs[0]
+    for i, d in enumerate(dirs[1:]):
+        nxt = str(tmp / f"fold{i}")
+        merge_databases([acc, d], nxt)
+        acc = nxt
+    flat = str(tmp / "flat")
+    merge_databases(dirs, flat)
+    assert db_bytes(acc) == db_bytes(flat)
+    assert db_bytes(flat) == db_bytes(one)
+
+
+def check_incremental(tmp, seed, n_profiles, split):
+    split = max(1, min(n_profiles - 1, split))
+    paths, one = _build(tmp, seed, n_profiles=n_profiles)
+    inc = str(tmp / "inc")
+    aggregate(paths[:split], inc, trace_paths=traces_of(paths[:split]))
+    aggregate(paths[split:], inc, base_db=inc,
+              trace_paths=traces_of(paths[split:]))
+    assert db_bytes(inc) == db_bytes(one)
+
+
+@given(st.integers(0, 10_000),
+       st.lists(st.integers(0, 3), min_size=2, max_size=6),
+       st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_any_sharding_merges_to_one_shot_bytes(tmp_path_factory, seed,
+                                               shard_of, reverse):
+    check_sharding_invariance(tmp_path_factory.mktemp("shard"), seed,
+                              shard_of, reverse)
+
+
+@given(st.integers(0, 10_000),
+       st.lists(st.integers(0, 2), min_size=3, max_size=6))
+@settings(max_examples=6, deadline=None)
+def test_merge_is_associative_property(tmp_path_factory, seed, shard_of):
+    check_associativity(tmp_path_factory.mktemp("assoc"), seed, shard_of)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 6), st.integers(1, 5))
+@settings(max_examples=6, deadline=None)
+def test_incremental_equals_one_shot_property(tmp_path_factory, seed,
+                                              n_profiles, split):
+    check_incremental(tmp_path_factory.mktemp("inc"), seed, n_profiles,
+                      split)
+
+
+def test_properties_hold_on_fixed_example(tmp_path):
+    """The property bodies on one pinned draw — runs with or without
+    hypothesis installed."""
+    check_sharding_invariance(tmp_path / "a", seed=7,
+                              shard_of=[0, 2, 1, 0, 2], reverse=True)
+    check_associativity(tmp_path / "b", seed=8, shard_of=[1, 0, 2, 1])
+    check_incremental(tmp_path / "c", seed=9, n_profiles=4, split=2)
+
+
+def test_property_suite_active_when_hypothesis_present():
+    import importlib
+    assert HAVE_HYPOTHESIS == (
+        importlib.util.find_spec("hypothesis") is not None)

@@ -1,17 +1,24 @@
 """Meta-test: the skip inventory is frozen (ISSUE 3 test sweep).
 
-Audit result (2026-07): every skip in this suite is *environment-
-dependent* — there is nothing to convert to a running test or xfail:
+Audit result (2026-07, re-audited for ISSUE 4): every skip in this
+suite is *environment-dependent* — there is nothing to convert to a
+running test or xfail:
 
 - ``hypothesis_compat.py`` marks ``@given`` property tests skipped only
   when the optional ``hypothesis`` package is absent (they run in CI,
-  which installs ``.[test]``);
+  which installs ``.[test]``).  ISSUE 4's merge-algebra properties
+  (``test_merge_properties.py``) ride this same single guard — no new
+  skip *mechanism* — and pin a no-hypothesis fallback by running the
+  property bodies on a fixed example
+  (``test_properties_hold_on_fixed_example``);
 - ``test_structure.py`` skips one assertion block only on jax builds
   that emit no ``StackFrames`` metadata table;
 - ``test_counters.py`` module-skips only when jax itself is absent
   (the analysis half of the suite stays importable without jax);
 - ``test_goldens.py`` skips only under the explicit opt-in
-  ``--update-goldens`` flag (the "test" then rewrites its golden);
+  ``--update-goldens`` flag (the "test" then rewrites its golden; the
+  ISSUE 4 merge-CLI golden reuses the same helper, so it adds no skip
+  site either);
 - ``test_derived_properties.py`` carries one ``skipif`` guard asserting
   the property suite is active whenever hypothesis is present.
 

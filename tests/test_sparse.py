@@ -4,7 +4,15 @@ import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core.sparse import (CMSReader, PMSReader, ProfileValues,
-                               dense_cube_nbytes, write_cms, write_pms)
+                               dense_cube_nbytes, read_cms, read_pms,
+                               write_cms, write_pms)
+
+
+def reconstruct_dense(pvals, n_profiles, n_ctx, n_metrics):
+    out = np.zeros((n_profiles, n_ctx, n_metrics))
+    for pv in pvals:
+        out[pv.profile_id, pv.ctx, pv.metric] = pv.values
+    return out
 
 
 def make_profiles(rng, n_profiles, n_ctx, n_metrics, density=0.1):
@@ -80,6 +88,95 @@ def test_missing_context_and_metric(tmp_path):
     assert r.lookup(999, 0, 0) == 0.0
     assert r.lookup(0, 999, 0) == 0.0
     assert r.lookup(0, 0, 999) == 0.0
+
+
+# --------------------------------------------------------------------------
+# Full-cube readers (ISSUE 4: the merge subsystem re-reads shard cubes)
+# --------------------------------------------------------------------------
+def test_read_pms_dense_reconstruction(tmp_path):
+    rng = np.random.default_rng(5)
+    profs, dense = make_profiles(rng, 4, 25, 9, density=0.2)
+    path = str(tmp_path / "m.pms")
+    write_pms(path, profs, n_workers=2)
+    got = read_pms(path)
+    assert [pv.profile_id for pv in got] == [0, 1, 2, 3]
+    assert np.array_equal(reconstruct_dense(got, 4, 25, 9), dense)
+
+
+def test_read_cms_dense_reconstruction(tmp_path):
+    rng = np.random.default_rng(6)
+    profs, dense = make_profiles(rng, 4, 25, 9, density=0.2)
+    path = str(tmp_path / "m.cms")
+    write_cms(path, profs, n_workers=2)
+    got = read_cms(path)
+    assert np.array_equal(reconstruct_dense(got, 4, 25, 9), dense)
+
+
+def test_pms_write_read_write_is_byte_identical(tmp_path):
+    """read_pms returns planes bitwise as written (row-major order), so a
+    write-back round-trips to identical bytes — what the database merge
+    relies on for the one-shot byte-identity contract."""
+    rng = np.random.default_rng(7)
+    profs, _ = make_profiles(rng, 3, 30, 8, density=0.15)
+    a = str(tmp_path / "a.pms")
+    write_pms(a, profs, n_workers=1)
+    b = str(tmp_path / "b.pms")
+    write_pms(b, read_pms(a), n_workers=1)
+    assert open(a, "rb").read() == open(b, "rb").read()
+
+
+def test_readers_roundtrip_profile_data_dense_matrix(tmp_path):
+    """End-to-end with the profile format: a measured profile's exclusive
+    dense matrix survives write_pms/write_cms -> reader -> dense."""
+    from repro.core.cct import CCT, Frame, HOST
+    from repro.core.metrics import default_registry
+    from repro.core.profmt import read_profile, write_profile
+    reg = default_registry()
+    cct = CCT()
+    rng = np.random.default_rng(8)
+    for i in range(12):
+        n = cct.insert_path([Frame(HOST, f"f{i % 5}", "a.py", i % 3)])
+        n.metrics.add(reg.kind("cpu"), "time_ns", float(rng.integers(1, 99)))
+    p = str(tmp_path / "p.rpro")
+    write_profile(p, cct, reg, {"rank": 0}, [])
+    prof = read_profile(p)
+    n_metrics = len(prof.metrics)
+    dense = prof.dense_matrix(n_metrics)
+    # node_ids index rows of dense_matrix; use them as ctx ids directly
+    rows = {int(n): i for i, n in enumerate(prof.node_ids)}
+    ctx, met = np.nonzero(dense)
+    pv = ProfileValues(0, np.array([int(prof.node_ids[c]) for c in ctx],
+                                   np.uint32).astype(np.uint32),
+                       met.astype(np.uint32), dense[ctx, met])
+    write_pms(str(tmp_path / "m.pms"), [pv], n_workers=1)
+    write_cms(str(tmp_path / "m.cms"), [pv], n_workers=1)
+    for got in (read_pms(str(tmp_path / "m.pms"))[0],
+                read_cms(str(tmp_path / "m.cms"))[0]):
+        back = np.zeros_like(dense)
+        back[[rows[int(c)] for c in got.ctx], got.metric] = got.values
+        assert np.array_equal(back, dense)
+
+
+def test_read_empty_cubes(tmp_path):
+    write_pms(str(tmp_path / "e.pms"), [], n_workers=1)
+    write_cms(str(tmp_path / "e.cms"), [], n_workers=1)
+    assert read_pms(str(tmp_path / "e.pms")) == []
+    assert read_cms(str(tmp_path / "e.cms")) == []
+
+
+def test_read_pms_keeps_empty_profile_plane(tmp_path):
+    """A profile with no nonzero values still owns a (empty) plane — it
+    must survive the merge round trip to keep profile ids canonical."""
+    pv0 = ProfileValues(0, np.zeros(0, np.uint32), np.zeros(0, np.uint32),
+                        np.zeros(0))
+    pv1 = ProfileValues(1, np.array([2], np.uint32),
+                        np.array([1], np.uint32), np.array([3.5]))
+    path = str(tmp_path / "m.pms")
+    write_pms(path, [pv0, pv1], n_workers=1)
+    got = read_pms(path)
+    assert [pv.profile_id for pv in got] == [0, 1]
+    assert len(got[0].values) == 0
+    assert got[1].values.tolist() == [3.5]
 
 
 @given(st.integers(1, 6), st.integers(1, 25), st.integers(1, 8),
