@@ -17,8 +17,9 @@ import time
 import traceback
 
 from benchmarks import (bench_aggregation, bench_channels, bench_counters,
-                        bench_merge, bench_overhead, bench_reconstruction,
-                        bench_roofline, bench_sparse, bench_traceview)
+                        bench_merge, bench_overhead, bench_pipeline,
+                        bench_reconstruction, bench_roofline, bench_sparse,
+                        bench_traceview)
 
 ALL = {
     "channels": bench_channels,        # §4.1 wait-free channels
@@ -30,10 +31,16 @@ ALL = {
     "traceview": bench_traceview,      # §4.4/§7 trace.db merge + raster
     "counters": bench_counters,        # §6 counter schedule + merge
     "merge": bench_merge,              # ISSUE 4 sharded/incremental merge
+    "pipeline": bench_pipeline,        # ISSUE 5 shard-driver scaling
 }
 
 # benchmarks whose results are persisted as BENCH_<name>.json
-TRACKED = ("aggregation", "channels", "traceview", "counters", "merge")
+TRACKED = ("aggregation", "channels", "traceview", "counters", "merge",
+           "pipeline")
+
+# --compare: a tracked stage time growing more than this fraction over
+# its committed BENCH_<name>.json baseline fails the sweep
+COMPARE_TOLERANCE = 0.25
 
 
 def budget_regressions(name: str, results: dict) -> list:
@@ -51,6 +58,43 @@ def budget_regressions(name: str, results: dict) -> list:
     return out
 
 
+def baseline_regressions(name: str, results: dict, baseline: dict,
+                         small: bool,
+                         tol: float = COMPARE_TOLERANCE) -> list:
+    """``--compare`` contract: every measured stage time (``*_s`` keys,
+    lower is better) is held against the committed ``BENCH_<name>.json``
+    baseline; growing more than ``tol`` (default 25%) is a regression
+    the sweep must fail loudly on, naming the benchmark, stage, and
+    both numbers.  Budget bounds (``*_budget*``) and pinned seed
+    numbers (``seed_*``) are constants, not measurements, and are
+    skipped; so is a baseline recorded at a different problem size
+    (``small`` mismatch)."""
+    if not baseline or baseline.get("small", False) != small:
+        return []
+    base = baseline.get("results", {})
+    out = []
+    for key, new in results.items():
+        if not key.endswith("_s") or "_budget" in key \
+                or key.startswith("seed_"):
+            continue
+        old = base.get(key)
+        if not isinstance(old, (int, float)) \
+                or not isinstance(new, (int, float)) or old <= 0:
+            continue
+        if new > old * (1 + tol):
+            out.append(f"{name}: {key} regressed {old:.3f}s -> {new:.3f}s "
+                       f"(+{(new / old - 1):.0%}, tolerance {tol:.0%})")
+    return out
+
+
+def load_baseline(baseline_dir: str, name: str) -> dict:
+    path = os.path.join(baseline_dir, f"BENCH_{name}.json")
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=sorted(ALL))
@@ -58,6 +102,15 @@ def main(argv=None):
                     help="reduced problem sizes (CI smoke)")
     ap.add_argument("--json-dir", default=".",
                     help="where BENCH_<name>.json files land")
+    ap.add_argument("--compare", action="store_true",
+                    help="fail the sweep when a tracked stage time "
+                         f"regresses >{COMPARE_TOLERANCE:.0%} against its "
+                         "committed BENCH_<name>.json baseline")
+    ap.add_argument("--baseline-dir",
+                    default=os.path.dirname(os.path.dirname(
+                        os.path.abspath(__file__))),
+                    help="where the committed baselines live "
+                         "(default: repo root)")
     args = ap.parse_args(argv)
     failures = 0
     regressions = []
@@ -76,6 +129,10 @@ def main(argv=None):
             results = mod.main(**kwargs)
             if isinstance(results, dict):
                 regressions += budget_regressions(name, results)
+                if args.compare and name in TRACKED:
+                    regressions += baseline_regressions(
+                        name, results,
+                        load_baseline(args.baseline_dir, name), args.small)
             if name in TRACKED and isinstance(results, dict):
                 os.makedirs(args.json_dir, exist_ok=True)
                 path = os.path.join(args.json_dir, f"BENCH_{name}.json")
@@ -90,7 +147,7 @@ def main(argv=None):
             traceback.print_exc()
         print(f"# {name} took {time.perf_counter() - t0:.1f}s", flush=True)
     for msg in regressions:
-        print(f"# BUDGET REGRESSION: {msg}", file=sys.stderr, flush=True)
+        print(f"# PERF REGRESSION: {msg}", file=sys.stderr, flush=True)
     return failures + len(regressions)
 
 

@@ -1,706 +1,113 @@
 """Streaming aggregation — the ``hpcprof`` / ``hpcprof-mpi`` analogue
-(paper §6.1).
+(paper §6.1): the public façade over the staged pipeline.
 
-Pipeline phases, exactly as the paper stages them:
+The five paper phases each live in their own module under
+``repro.core.pipeline`` (acquire -> unify -> expand -> stats ->
+traceconv, behind dataclass stage contracts), the database
+reader/writer in ``pipeline.database``, and the pluggable serial /
+thread / process shard driver in ``pipeline.driver`` —
+``docs/pipeline.md`` documents the architecture, ``docs/aggregation.md``
+the canonical-database contract every stage upholds: database bytes are
+a pure function of the profile set, which is what makes shard
+aggregation composable (``repro.core.merge``), the parallel driver
+byte-identical to serial by construction, and retention policies
+(``repro.core.retention``) exact.
 
-1. **Input acquisition** — profile files are listed and distributed evenly
-   across ranks (round-robin), then processed as dynamic per-thread tasks.
-2. **Call-path unification** — each rank unifies its profiles' CCTs into a
-   rank-local tree; rank trees merge up a reduction tree of arity ``t``
-   (the per-rank thread count) to the root, yielding the global calling
-   context tree and a local->global id mapping per profile.
-3. **Calling-context expansion** — flat GPU-op frames are expanded against
-   hpcstruct-analogue structure files (lines / loops / inlined scopes).
-   (Profiles measured with runtime expansion skip this, see profiler.py.)
-4. **Statistic generation** — per profile, metric values are scatter-added
-   into a sparse (ctx, metric) COO set and propagated up the tree with a
-   vectorized level-order sweep (one grouped ``np.add.at`` per tree level,
-   deepest first); workers share *nothing* — per-profile partial
-   accumulators are folded once at the end, in profile order, so the
-   result is deterministic and lock-free (the paper's communication-free
-   workers after exscan).  Per-profile values stream into the PMS/CMS
-   writers.
-5. **Trace + final outputs** — trace files are rewritten in terms of global
-   ctx ids (vectorized gather + bulk ``TraceWriter.append_many``) and
-   merged into one seekable ``trace.db`` (repro.traceview); tree, stats,
-   and sparse cubes land in the database directory.
+This module re-exports every name the pre-decomposition monolith
+offered, so existing imports keep working unchanged.
 
-"Ranks" are worker threads here (single-host container): the reduction
-tree, exscan offset computation, and nnz-balanced work splitting are the
-same algorithms hpcprof-mpi runs over MPI; docs/aggregation.md discusses
-the honesty of this mapping, the GIL caveats, and the bit-exactness
-contract (the vectorized path reproduces the reference implementation's
-floating-point addition order, so databases are byte-identical).
+CLI::
 
-**Canonical-database contract** (ISSUE 4): the bytes of every output —
-tree, stats, CMS/PMS cubes, trace.db — are a pure function of the
-*profile set*, independent of ``n_ranks`` / ``n_threads`` / input path
-order.  Context ids are renumbered into canonical BFS order (children
-sorted by frame key) after unification, and profile ids are assigned in
-canonical identity order.  This is what makes sharded aggregation
-composable: ``repro.core.merge`` folds independently-built databases
-into bytes identical to a one-shot ``aggregate()`` over the union
-(docs/aggregation.md §incremental merge).
+    python -m repro.core.aggregate MEASURE_DIR -o DB [--workers N]
+        [--driver serial|thread|process] [--base DB] [--retain SPEC]
 """
 from __future__ import annotations
 
-import dataclasses
-import hashlib
-import json
 import os
 import time
-import warnings
-from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence
 
-import numpy as np
-
-from repro.core.cct import Frame, GPU_OP, PLACEHOLDER, tree_depths
-from repro.core.profmt import (FRAME_KIND_IDX, ProfileData, read_profile)
-from repro.core.sparse import ProfileValues, write_cms, write_pms
+# Re-exported public surface (the façade contract: no import breaks).
+from repro.core.pipeline.acquire import Acquisition, acquire  # noqa: F401
+from repro.core.pipeline.contracts import (ProfileEntry,  # noqa: F401
+                                           ShardResult, UnifiedProfile,
+                                           Unification)
+from repro.core.pipeline.database import (STATS, Database,  # noqa: F401
+                                          ancestor_closure,
+                                          profile_sort_key, write_database)
+from repro.core.pipeline.database import write_database as _write_database  # noqa: F401,E501
+from repro.core.pipeline.driver import (DRIVERS, ENV_DRIVER,  # noqa: F401
+                                        ENV_WORKERS, resolve_driver)
+from repro.core.pipeline.expand import make_expander  # noqa: F401
+from repro.core.pipeline.stats import (_group_sum_ordered,  # noqa: F401
+                                       _profile_inclusive_sparse,
+                                       generate_stats)
+from repro.core.pipeline.traceconv import convert_traces  # noqa: F401
+from repro.core.pipeline.unify import (GlobalTree,  # noqa: F401
+                                       apply_order, canonical_order, unify)
 from repro.core.structure import HloModule
-from repro.core.trace import TraceWriter, read_trace
-
-STATS = ("sum", "min", "mean", "max", "std", "cov")
-
-_GPU_OP_KIND = FRAME_KIND_IDX[GPU_OP]
 
 
-# --------------------------------------------------------------------------
-# Global tree under construction
-# --------------------------------------------------------------------------
-class GlobalTree:
-    """Global CCT built by merging per-profile trees.
-
-    Frames are interned into an integer id table (strings interned once,
-    then a frame is a (kind, name id, module id, line) key), and children
-    are resolved through a dict keyed by the packed integer
-    ``(parent << 32) | frame_id`` — per-node tuple/Frame hashing is off the
-    hot path entirely; ``merge_paths`` computes each profile's frame ids
-    with array-level gathers over the profile's string table.
-    """
-
-    def __init__(self):
-        self.frames: List[Frame] = [Frame("root", "<program root>")]
-        self.parents: List[int] = [-1]
-        self._children: Dict[int, int] = {}      # (parent<<32)|fid -> gid
-        self._strings: Dict[str, int] = {}       # string intern table
-        self._key_fids: Dict[Tuple[int, int, int, int], int] = {}
-        self._frame_of_fid: List[Frame] = []     # fid -> canonical Frame
-        self._frame_cache: Dict[Frame, int] = {}  # fast path for child()
-
-    # -- interning ----------------------------------------------------------
-    def _intern_string(self, s: str) -> int:
-        i = self._strings.get(s)
-        if i is None:
-            i = len(self._strings)
-            self._strings[s] = i
-        return i
-
-    def _fid_for_key(self, key: Tuple[int, int, int, int],
-                     frame: Frame) -> int:
-        fid = self._key_fids.get(key)
-        if fid is None:
-            fid = len(self._frame_of_fid)
-            self._key_fids[key] = fid
-            self._frame_of_fid.append(frame)
-        return fid
-
-    def intern_frame(self, frame: Frame) -> int:
-        fid = self._frame_cache.get(frame)
-        if fid is None:
-            kind = FRAME_KIND_IDX.get(frame.kind)
-            if kind is None:   # kinds outside the profile format's table
-                kind = -2 - self._intern_string(frame.kind)
-            key = (kind, self._intern_string(frame.name),
-                   self._intern_string(frame.module), int(frame.line))
-            fid = self._fid_for_key(key, frame)
-            self._frame_cache[frame] = fid
-        return fid
-
-    # -- tree construction ---------------------------------------------------
-    def _child_fid(self, parent: int, fid: int) -> int:
-        key = (parent << 32) | fid
-        gid = self._children.get(key)
-        if gid is None:
-            gid = len(self.frames)
-            self.frames.append(self._frame_of_fid[fid])
-            self.parents.append(parent)
-            self._children[key] = gid
-        return gid
-
-    def child(self, parent: int, frame: Frame) -> int:
-        return self._child_fid(parent, self.intern_frame(frame))
-
-    def _profile_fids(self, prof: ProfileData) -> np.ndarray:
-        """Per-node global frame ids, resolved with one dict lookup per
-        *unique* frame (array-level dedup) instead of one per node."""
-        if prof.frame_kinds is None:
-            return np.fromiter((self.intern_frame(f) for f in prof.frames),
-                               np.int64, len(prof.frames))
-        gsid = np.fromiter((self._intern_string(s) for s in prof.strings),
-                           np.int64, len(prof.strings)) \
-            if prof.strings else np.zeros(0, np.int64)
-        rows = np.stack([prof.frame_kinds,
-                         gsid[prof.frame_name_sids],
-                         gsid[prof.frame_mod_sids],
-                         prof.frame_lines], axis=1)
-        uniq, first, inv = np.unique(rows, axis=0, return_index=True,
-                                     return_inverse=True)
-        fids_u = np.empty(len(uniq), np.int64)
-        for j in range(len(uniq)):
-            r = uniq[j]
-            fids_u[j] = self._fid_for_key(
-                (int(r[0]), int(r[1]), int(r[2]), int(r[3])),
-                prof.frames[int(first[j])])
-        return fids_u[inv.ravel()]
-
-    def merge_paths(self, prof: ProfileData,
-                    expand=None) -> np.ndarray:
-        """Insert one profile's tree; returns local node id -> global id."""
-        n = len(prof.node_ids)
-        local_to_global = np.zeros(int(prof.node_ids.max()) + 1 if n else 1,
-                                   np.int64)
-        fids = self._profile_fids(prof).tolist()
-        node_ids = prof.node_ids.tolist()
-        parents = prof.parents.tolist()
-        is_gpu = (prof.frame_kinds == _GPU_OP_KIND).tolist() \
-            if (expand is not None and prof.frame_kinds is not None) else None
-        l2g = local_to_global.tolist()
-        children = self._children
-        frames_out, parents_out = self.frames, self.parents
-        frame_of_fid = self._frame_of_fid
-        # profiles store nodes in creation order: parents precede children
-        for i in range(n):
-            par = parents[i]
-            if par < 0:
-                l2g[node_ids[i]] = 0
-                continue
-            gpar = l2g[par]
-            if expand is not None and (
-                    is_gpu[i] if is_gpu is not None
-                    else prof.frames[i].kind == GPU_OP):
-                for f in expand(prof.frames[i], prof):
-                    gpar = self.child(gpar, f)
-                l2g[node_ids[i]] = gpar
-                continue
-            key = (gpar << 32) | fids[i]
-            gid = children.get(key)
-            if gid is None:
-                gid = len(frames_out)
-                frames_out.append(frame_of_fid[fids[i]])
-                parents_out.append(gpar)
-                children[key] = gid
-            l2g[node_ids[i]] = gid
-        local_to_global[:] = l2g
-        return local_to_global
-
-    def merge_tree(self, other: "GlobalTree") -> np.ndarray:
-        """Merge another tree into this one (reduction-tree step)."""
-        mapping = np.zeros(len(other.frames), np.int64)
-        m = mapping.tolist()
-        other_parents = other.parents
-        for gid in range(1, len(other.frames)):
-            m[gid] = self.child(m[other_parents[gid]], other.frames[gid])
-        mapping[:] = m
-        return mapping
-
-    def topo_order(self) -> np.ndarray:
-        return np.arange(len(self.frames))  # creation order is topological
-
-    def depths(self) -> np.ndarray:
-        """Per-node depth (root = 0), see ``cct.tree_depths``."""
-        return tree_depths(self.parents)
-
-
-# --------------------------------------------------------------------------
-# Canonicalization: the database-bytes-are-a-pure-function contract
-# --------------------------------------------------------------------------
-def canonical_order(frames: List[Frame], parents) -> np.ndarray:
-    """Old context id -> canonical id.
-
-    Canonical numbering is a BFS of the tree with each node's children
-    visited in sorted frame-key order ``(kind, name, module, line)`` —
-    a pure function of the tree's *shape*, independent of the insertion
-    order that built it.  Properties the pipeline relies on:
-
-    - topological: a parent's canonical id precedes all its children's
-      (so the reverse-id / level-order inclusive sweeps stay valid);
-    - the relative order of any two children of one parent is decided by
-      frame-key comparison alone, so it is identical in every tree that
-      contains both — per-profile inclusive values come out bitwise
-      identical whether a profile is aggregated inside a shard or inside
-      the full union (the heart of the ``merge_databases`` byte-identity
-      contract, docs/aggregation.md).
-    """
-    n = len(frames)
-    parents = np.asarray(parents, np.int64)
-    key_rank = {k: i for i, k in enumerate(sorted(
-        {(f.kind, f.name, f.module, f.line) for f in frames}))}
-    frank = np.fromiter(
-        (key_rank[(f.kind, f.name, f.module, f.line)] for f in frames),
-        np.int64, n)
-    depth = tree_depths(parents)
-    new_id = np.zeros(n, np.int64)
-    done = 1                       # root keeps id 0
-    for lvl in range(1, int(depth.max()) + 1 if n > 1 else 1):
-        idx = np.nonzero(depth == lvl)[0]
-        if len(idx) == 0:
-            break
-        order = np.lexsort((frank[idx], new_id[parents[idx]]))
-        new_id[idx[order]] = np.arange(done, done + len(idx))
-        done += len(idx)
-    return new_id
-
-
-def apply_order(frames: List[Frame], parents, new_id: np.ndarray
-                ) -> Tuple[List[Frame], np.ndarray]:
-    """Permute a (frames, parents) tree by an old->new id map."""
-    parents = np.asarray(parents, np.int64)
-    frames_c: List[Frame] = list(frames)
-    for old, new in enumerate(new_id.tolist()):
-        frames_c[new] = frames[old]
-    parents_c = np.full(len(frames), -1, np.int64)
-    has_par = parents >= 0
-    parents_c[new_id[has_par]] = new_id[parents[has_par]]
-    return frames_c, parents_c
-
-
-def _ident_int(identity: dict, *keys) -> int:
-    for k in keys:
-        v = identity.get(k)
-        if v is not None:
-            try:
-                return int(v)
-            except (TypeError, ValueError):
-                return 0
-    return 0
-
-
-def profile_sort_key(identity: dict, ctx: np.ndarray, met: np.ndarray,
-                     val: np.ndarray) -> tuple:
-    """Canonical profile order: host, rank, CPU threads before GPU
-    streams, thread/stream index (the trace.db line order), then the full
-    identity JSON, then a digest of the value triplets as a content
-    tie-break — a pure function of the profile, never of input order."""
-    digest = hashlib.sha256(
-        np.ascontiguousarray(ctx.astype("<u4")).tobytes()
-        + np.ascontiguousarray(met.astype("<u4")).tobytes()
-        + np.ascontiguousarray(val.astype("<f8")).tobytes()).hexdigest()
-    return (str(identity.get("host", "")), _ident_int(identity, "rank"),
-            0 if identity.get("type", "cpu") == "cpu" else 1,
-            _ident_int(identity, "thread", "stream"),
-            json.dumps(identity, sort_keys=True), digest)
-
-
-# --------------------------------------------------------------------------
-# Expansion (phase 3)
-# --------------------------------------------------------------------------
-def make_expander(structures: Dict[str, HloModule]):
-    """Returns expand(frame, prof) -> [Frame, ...] using structure files."""
-    cache: Dict[Tuple[str, int], tuple] = {}
-
-    def expand(frame: Frame, prof: ProfileData):
-        mod = structures.get(frame.module)
-        if mod is None:
-            return (frame,)
-        key = (frame.module, frame.line)   # line == op index for GPU_OP
-        frames = cache.get(key)
-        if frames is None:
-            ops = mod.all_ops()
-            if frame.line < len(ops):
-                frames = tuple(mod.op_context(ops[frame.line]))
-            else:
-                frames = (frame,)
-            cache[key] = frames
-        return frames
-
-    return expand
-
-
-# --------------------------------------------------------------------------
-# Database
-# --------------------------------------------------------------------------
-@dataclasses.dataclass
-class Database:
-    out_dir: str
-    frames: List[Frame]
-    parents: np.ndarray
-    metrics: List[str]
-    profile_ids: Dict[int, dict]            # profile id -> identity
-    stats: Dict[str, np.ndarray]            # stat -> (n_ctx, n_metrics)
-    inclusive: bool = True
-    # CSR children index, built lazily on first children_of() call
-    _child_order: Optional[np.ndarray] = dataclasses.field(
-        default=None, init=False, repr=False)
-    _child_parents: Optional[np.ndarray] = dataclasses.field(
-        default=None, init=False, repr=False)
-    _depths: Optional[np.ndarray] = dataclasses.field(
-        default=None, init=False, repr=False)
-
-    @classmethod
-    def load(cls, out_dir: str) -> "Database":
-        with open(os.path.join(out_dir, "meta.json")) as f:
-            meta = json.load(f)
-        frames = [Frame(*f) for f in meta["frames"]]
-        data = np.load(os.path.join(out_dir, "stats.npz"))
-        stats = {k: data[k] for k in data.files}
-        return cls(out_dir, frames, np.asarray(meta["parents"]),
-                   meta["metrics"],
-                   {int(k): v for k, v in meta["profiles"].items()}, stats)
-
-    def metric_id(self, name: str) -> int:
-        return self.metrics.index(name)
-
-    def children_of(self, gid: int) -> List[int]:
-        """Children of a context, via a precomputed CSR index (a stable
-        argsort of the parent array) instead of an O(n) scan per call."""
-        if self._child_order is None:
-            parents = np.asarray(self.parents, np.int64)
-            order = np.argsort(parents, kind="stable")
-            # publish _child_parents first: a concurrent caller passing the
-            # None-check above must find both arrays populated
-            self._child_parents = parents[order]
-            self._child_order = order
-        lo, hi = np.searchsorted(self._child_parents, [gid, gid + 1])
-        return [int(i) for i in self._child_order[lo:hi]]
-
-    def depths(self) -> np.ndarray:
-        """Per-context depth (root = 0), cached — the traceview raster and
-        interval stats project contexts through this."""
-        if self._depths is None:
-            self._depths = tree_depths(self.parents)
-        return self._depths
-
-    def trace_db_path(self) -> str:
-        return os.path.join(self.out_dir, "trace.db")
-
-    def cms_path(self) -> str:
-        return os.path.join(self.out_dir, "metrics.cms")
-
-    def pms_path(self) -> str:
-        return os.path.join(self.out_dir, "metrics.pms")
-
-
-# --------------------------------------------------------------------------
-# Phase 4 kernels: sparse per-profile stats + level-order propagation
-# --------------------------------------------------------------------------
-def _group_sum_ordered(keys: np.ndarray, vals: np.ndarray
-                       ) -> Tuple[np.ndarray, np.ndarray]:
-    """Sum ``vals`` grouped by ``keys``, accumulating within each group in
-    the array order of equal keys (stable sort + one unbuffered
-    ``np.add.at``) — the FP addition order therefore matches a sequential
-    scatter loop over the same data."""
-    order = np.argsort(keys, kind="stable")
-    ks, vs = keys[order], vals[order]
-    uk, counts = np.unique(ks, return_counts=True)
-    gidx = np.repeat(np.arange(len(uk)), counts)
-    out = np.zeros(len(uk))
-    np.add.at(out, gidx, vs)
-    return uk, out
-
-
-def _profile_inclusive_sparse(prof: ProfileData, gmap: np.ndarray,
-                              parents: np.ndarray, depth: np.ndarray,
-                              n_metrics: int
-                              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """One profile's inclusive (ctx, metric, value) triplets against the
-    global tree, fully sparse.
-
-    Exclusive values are scatter-added into COO keyed by
-    ``ctx * n_metrics + metric``; inclusive propagation is a level-order
-    sweep from the deepest tree level to the root — per level one grouped
-    ``np.add.at`` folds the (already-inclusive) child entries into their
-    parents.  Children are folded in decreasing global-id order after the
-    parent's own exclusive value, which reproduces, bit for bit, the FP
-    addition order of the classic dense reverse-id sweep (see
-    docs/aggregation.md and tests/test_aggregate_equiv.py).
-    """
-    n_values = len(prof.values)
-    if n_values == 0 or n_metrics == 0:
-        z = np.zeros(0, np.int64)
-        return z, z, np.zeros(0, np.float64)
-    ranges = prof.ranges
-    starts, counts = ranges[:, 1], ranges[:, 2]
-    if (len(ranges) and starts[0] == 0
-            and starts[-1] + counts[-1] == n_values
-            and np.array_equal(starts[1:], starts[:-1] + counts[:-1])):
-        node_of_value = np.repeat(gmap[ranges[:, 0]], counts)
-    else:   # non-contiguous layout: rare, keep the per-range fill
-        node_of_value = np.zeros(n_values, np.int64)
-        for nid, start, count in ranges:
-            node_of_value[start:start + count] = gmap[int(nid)]
-    keys = node_of_value * n_metrics + prof.value_mids.astype(np.int64)
-    uk, val = _group_sum_ordered(keys, prof.values)
-    ctx = uk // n_metrics
-    met = uk % n_metrics
-
-    dd = depth[ctx]
-    maxd = int(dd.max()) if len(dd) else 0
-    for lvl in range(maxd, 0, -1):
-        sel = dd == lvl
-        if not sel.any():
-            continue
-        s_ctx, s_met, s_val = ctx[sel], met[sel], val[sel]
-        # children fold into a parent in decreasing id order (stable), the
-        # order the dense reverse-id sweep adds them in
-        o = np.argsort(-s_ctx, kind="stable")
-        up_keys = parents[s_ctx[o]] * n_metrics + s_met[o]
-        plv = dd == lvl - 1
-        # parent's own (exclusive) entry first, then its children
-        cat_keys = np.concatenate([ctx[plv] * n_metrics + met[plv], up_keys])
-        cat_vals = np.concatenate([val[plv], s_val[o]])
-        uk2, nv = _group_sum_ordered(cat_keys, cat_vals)
-        keep = ~plv
-        ctx = np.concatenate([ctx[keep], uk2 // n_metrics])
-        met = np.concatenate([met[keep], uk2 % n_metrics])
-        val = np.concatenate([val[keep], nv])
-        dd = depth[ctx]
-
-    nz = val != 0.0          # match np.nonzero() on the dense matrix
-    ctx, met, val = ctx[nz], met[nz], val[nz]
-    o = np.argsort(ctx * n_metrics + met, kind="stable")  # row-major order
-    return ctx[o], met[o], val[o]
-
-
-# --------------------------------------------------------------------------
-# Database writing (shared with repro.core.merge)
-# --------------------------------------------------------------------------
-def _write_database(out_dir: str, frames: List[Frame], parents: np.ndarray,
-                    metrics: List[str],
-                    profiles: List[Tuple[dict, np.ndarray, np.ndarray,
-                                         np.ndarray]],
-                    *, n_workers: int, t0: float,
-                    timing_base: Optional[dict] = None) -> Database:
-    """Fold per-profile inclusive triplets into the on-disk database.
-
-    ``profiles`` is a list of ``(identity, ctx, metric, value)`` sparse
-    triplets against canonical context ids, in *any* order: profiles are
-    sorted into canonical order here (``profile_sort_key``), so stats
-    accumulation, the CMS/PMS cubes, and ``meta.json`` come out
-    byte-identical for any arrival order — the single writer behind both
-    ``aggregate()`` and ``merge_databases()``.
-    """
-    os.makedirs(out_dir, exist_ok=True)
-    n_ctx = len(frames)
-    n_metrics = len(metrics)
-    prepped = []
-    for ident, ctx, met, val in profiles:
-        ctx = np.asarray(ctx, np.int64)
-        met = np.asarray(met, np.int64)
-        val = np.asarray(val, np.float64)
-        o = np.lexsort((met, ctx))          # row-major, defensive re-sort
-        ctx, met, val = ctx[o], met[o], val[o]
-        prepped.append((profile_sort_key(ident, ctx, met, val),
-                        ident, ctx, met, val))
-    prepped.sort(key=lambda it: it[0])
-
-    identities: Dict[int, dict] = {}
-    pvals: List[ProfileValues] = []
-    acc_sum = np.zeros((n_ctx, n_metrics))
-    acc_min = np.full((n_ctx, n_metrics), np.inf)
-    acc_max = np.full((n_ctx, n_metrics), -np.inf)
-    acc_sumsq = np.zeros((n_ctx, n_metrics))
-    acc_count = np.zeros((n_ctx, n_metrics))
-    for pidx, (_, ident, ctx, met, val) in enumerate(prepped):
-        identities[pidx] = ident
-        pvals.append(ProfileValues(pidx, ctx.astype(np.uint32),
-                                   met.astype(np.uint32), val))
-        idx = (ctx, met)
-        acc_sum[idx] += val           # (ctx, metric) pairs unique per profile
-        np.minimum.at(acc_min, idx, val)
-        np.maximum.at(acc_max, idx, val)
-        acc_sumsq[idx] += val ** 2
-        acc_count[idx] += 1
-
-    count = np.maximum(acc_count, 1)
-    mean = acc_sum / count
-    var = np.maximum(acc_sumsq / count - mean ** 2, 0.0)
-    std = np.sqrt(var)
-    stats = {
-        "sum": acc_sum,
-        "min": np.where(np.isfinite(acc_min), acc_min, 0.0),
-        "mean": mean,
-        "max": np.where(np.isfinite(acc_max), acc_max, 0.0),
-        "std": std,
-        "cov": np.where(mean != 0, std / np.maximum(np.abs(mean), 1e-30),
-                        0.0),
-        "count": acc_count,
-    }
-
-    cms_info = write_cms(os.path.join(out_dir, "metrics.cms"), pvals,
-                         n_workers=n_workers)
-    pms_info = write_pms(os.path.join(out_dir, "metrics.pms"), pvals,
-                         n_workers=n_workers)
-
-    meta = {
-        "frames": [[f.kind, f.name, f.module, f.line] for f in frames],
-        "parents": [int(p) for p in parents],
-        "metrics": metrics,
-        "profiles": {str(i): ident for i, ident in identities.items()},
-        "cms": cms_info, "pms": pms_info,
-        "timing": {**(timing_base or {}),
-                   "total_s": time.monotonic() - t0},
-    }
-    with open(os.path.join(out_dir, "meta.json"), "w") as f:
-        json.dump(meta, f)
-    np.savez(os.path.join(out_dir, "stats.npz"), **stats)
-    return Database(out_dir, frames, np.asarray(parents), metrics,
-                    identities, stats)
-
-
-# --------------------------------------------------------------------------
-# The aggregation driver
-# --------------------------------------------------------------------------
 def aggregate(profile_paths: Sequence[str], out_dir: str, *,
               n_ranks: int = 4, n_threads: int = 4,
               structures: Optional[Dict[str, HloModule]] = None,
               trace_paths: Sequence[str] = (),
               trace_db: bool = True,
               base_db: "Optional[str | Database]" = None,
-              timing: Optional[dict] = None) -> Database:
-    """One-shot aggregation of ``profile_paths`` into ``out_dir``.
+              timing: Optional[dict] = None,
+              workers: Optional[int] = None,
+              driver: Optional[str] = None,
+              retention=None) -> Database:
+    """Aggregate ``profile_paths`` into the database at ``out_dir``.
 
-    With ``base_db`` (a database directory or ``Database``), runs in
-    incremental mode: the new profiles extend the base database and the
-    output is byte-identical to a one-shot run over the union — see
-    ``_aggregate_incremental`` and ``repro.core.merge``."""
+    - ``workers`` / ``driver`` select the shard driver
+      (``pipeline.driver``): ``workers=4`` runs four shard aggregations
+      on a ``ProcessPoolExecutor`` and folds them through
+      ``merge_databases`` — byte-identical to the serial one-shot by
+      construction, faster once shard work dominates the fold.
+      Defaults honour ``$REPRO_AGG_DRIVER`` / ``$REPRO_AGG_WORKERS``.
+    - ``base_db`` (a database directory or ``Database``) switches to
+      incremental mode: the new profiles extend the base and the output
+      is byte-identical to a one-shot run over the union — see
+      ``_aggregate_incremental`` and ``repro.core.merge``.
+    - ``retention`` (a ``repro.core.retention.RetentionPolicy``) is
+      applied at merge time: epochs beyond the window are retired,
+      duplicates compacted, and the result is byte-identical to
+      re-aggregating the surviving profile set.
+    """
     if base_db is not None:
         return _aggregate_incremental(
             profile_paths, out_dir, base_db, n_ranks=n_ranks,
             n_threads=n_threads, structures=structures,
-            trace_paths=trace_paths, trace_db=trace_db, timing=timing)
-    os.makedirs(out_dir, exist_ok=True)
-    t0 = time.monotonic()
-    expand = make_expander(structures) if structures else None
-
-    # phase 1: acquisition + round-robin distribution
-    ranks: List[List[str]] = [[] for _ in range(n_ranks)]
-    for i, p in enumerate(profile_paths):
-        ranks[i % n_ranks].append(p)
-
-    # phase 2: per-rank unification (threads = dynamic tasks inside a rank)
-    def unify_rank(paths: List[str]):
-        tree = GlobalTree()
-        profs: List[Tuple[str, ProfileData, np.ndarray]] = []
-        def load(path):
-            return path, read_profile(path)
-        with ThreadPoolExecutor(max(1, n_threads)) as ex:
-            loaded = list(ex.map(load, paths))
-        for path, prof in loaded:
-            mapping = tree.merge_paths(prof, expand)
-            profs.append((path, prof, mapping))
-        return tree, profs
-
-    with ThreadPoolExecutor(max(1, n_ranks)) as ex:
-        rank_results = list(ex.map(unify_rank, ranks))
-
-    # reduction tree (arity = n_threads) to the root rank
-    trees = [r[0] for r in rank_results]
-    mappings: List[Optional[np.ndarray]] = [None] * len(trees)
-    root = trees[0]
-    # k-ary reduction: fold each tree into root, tracked per rank
-    for i in range(1, len(trees)):
-        mappings[i] = root.merge_tree(trees[i])
-    t_unify = time.monotonic() - t0
-
-    # canonical context renumbering: database ids are a pure function of
-    # the profile set, independent of n_ranks / path order (merge contract)
-    new_id = canonical_order(root.frames, root.parents)
-    frames_c, parents_c = apply_order(root.frames, root.parents, new_id)
-
-    # broadcast: convert each profile's local->rank mapping to ->canonical
-    all_profiles: List[Tuple[str, ProfileData, np.ndarray]] = []
-    for r, (tree, profs) in enumerate(rank_results):
-        conv = mappings[r]
-        for path, prof, mapping in profs:
-            gmap = mapping if conv is None else conv[mapping]
-            all_profiles.append((path, prof, new_id[gmap]))
-
-    # phase 4: statistic generation (parallel over profiles).  Workers are
-    # communication-free: each returns its profile's sparse triplets; the
-    # partial accumulators are folded in _write_database, once, in
-    # canonical profile order — no shared state, no lock, deterministic.
-    metrics = all_profiles[0][1].metrics if all_profiles else []
-    n_metrics = len(metrics)
-    parents = parents_c
-    depth = tree_depths(parents_c)
-
-    def gen_stats(args):
-        path, prof, gmap = args
-        ctx, met, val = _profile_inclusive_sparse(prof, gmap, parents,
-                                                  depth, n_metrics)
-        return (prof.identity, ctx, met, val)
-
-    with ThreadPoolExecutor(max(1, n_ranks * n_threads)) as ex:
-        profile_items = list(ex.map(gen_stats, all_profiles))
-    t_stats = time.monotonic() - t0 - t_unify
-
-    # phase 5: trace conversion (vectorized gather through gmap)
-    path_to_gmap = {path: gmap for path, prof, gmap in all_profiles}
-    converted_traces: List[str] = []
-    for tpath in trace_paths:
-        td = read_trace(tpath)
-        ppath = tpath.replace(".rtrc", ".rpro")
-        gmap = path_to_gmap.get(ppath)
-        identity = td.identity
-        if gmap is None:
-            # no matching profile: ctx ids pass through unmapped (e.g. the
-            # profiler's GPU-stream traces, which record app-thread node
-            # ids — see ROADMAP).  Mark the line so downstream composition
-            # (repro.core.merge) copies it verbatim instead of remapping
-            # ids that were never database ctx ids.
-            identity = {**identity, "ctx_unmapped": True}
-        out = TraceWriter(os.path.join(out_dir, os.path.basename(tpath)),
-                          identity)
-        if gmap is None:
-            gids = td.ctx
-        else:
-            valid = (td.ctx >= 0) & (td.ctx < len(gmap))
-            if not valid.all():
-                warnings.warn(
-                    f"{tpath}: {int((~valid).sum())} trace event(s) "
-                    "reference ctx ids outside the profile's id map; "
-                    "attributing them to the root context", RuntimeWarning)
-            gids = np.where(valid,
-                            gmap[np.clip(td.ctx, 0, len(gmap) - 1)], 0)
-        out.append_many(td.starts, td.ends, gids)
-        out.close()
-        if out.path in converted_traces:
-            warnings.warn(
-                f"{tpath}: basename collides with another trace path; "
-                "the earlier converted trace was overwritten",
-                RuntimeWarning)
-        else:
-            converted_traces.append(out.path)
-    if converted_traces and trace_db:
-        # post-mortem merge into the seekable trace.db (traceview, §4.4):
-        # the converted traces already carry global ctx ids, so the merged
-        # database is directly renderable against this Database
-        from repro.traceview.tracedb import build_db
-        build_db(converted_traces, os.path.join(out_dir, "trace.db"))
-
-    db = _write_database(out_dir, frames_c, parents_c, metrics,
-                         profile_items, n_workers=n_ranks * n_threads,
-                         t0=t0, timing_base={"unify_s": t_unify,
-                                             "stats_s": t_stats})
-    if timing is not None:
-        with open(os.path.join(out_dir, "meta.json")) as f:
-            timing.update(json.load(f)["timing"])
-    return db
+            trace_paths=trace_paths, trace_db=trace_db, timing=timing,
+            workers=workers, driver=driver, retention=retention)
+    if retention is not None and not retention.is_noop:
+        return _aggregate_retained(
+            profile_paths, out_dir, retention, n_ranks=n_ranks,
+            n_threads=n_threads, structures=structures,
+            trace_paths=trace_paths, trace_db=trace_db, timing=timing,
+            workers=workers, driver=driver)
+    from repro.core.pipeline import driver as _driver
+    return _driver.run(profile_paths, out_dir, n_ranks=n_ranks,
+                       n_threads=n_threads, structures=structures,
+                       trace_paths=trace_paths, trace_db=trace_db,
+                       timing=timing, workers=workers, driver=driver)
 
 
 def _aggregate_incremental(profile_paths: Sequence[str], out_dir: str,
-                           base_db: str, *, n_ranks: int, n_threads: int,
+                           base_db, *, n_ranks: int, n_threads: int,
                            structures, trace_paths: Sequence[str],
-                           trace_db: bool, timing: Optional[dict]
-                           ) -> Database:
+                           trace_db: bool, timing: Optional[dict],
+                           workers=None, driver=None,
+                           retention=None) -> Database:
     """``aggregate(..., base_db=...)``: extend an existing database with
     new profiles.  The new profiles are aggregated into a scratch
     database, then folded with the base through ``merge_databases`` — the
     result is byte-identical to a one-shot ``aggregate()`` over the union
     of the base's profiles and the new ones (the canonical contract).
-    ``out_dir`` may equal ``base_db`` (in-place epoch extension)."""
+    ``out_dir`` may equal ``base_db`` (in-place epoch extension); a
+    ``retention`` policy retires old epochs in the same fold."""
+    import json
     import shutil
     import tempfile
     from repro.core.merge import merge_databases
@@ -711,10 +118,11 @@ def _aggregate_incremental(profile_paths: Sequence[str], out_dir: str,
     try:
         aggregate(profile_paths, scratch, n_ranks=n_ranks,
                   n_threads=n_threads, structures=structures,
-                  trace_paths=trace_paths, trace_db=trace_db)
+                  trace_paths=trace_paths, trace_db=trace_db,
+                  workers=workers, driver=driver)
         db = merge_databases([base_dir, scratch], out_dir,
                              n_workers=n_ranks * n_threads,
-                             trace_db=trace_db)
+                             trace_db=trace_db, retention=retention)
     finally:
         shutil.rmtree(scratch, ignore_errors=True)
     if timing is not None:
@@ -722,3 +130,36 @@ def _aggregate_incremental(profile_paths: Sequence[str], out_dir: str,
             timing.update(json.load(f)["timing"])
         timing["incremental_s"] = time.monotonic() - t0
     return db
+
+
+def _aggregate_retained(profile_paths: Sequence[str], out_dir: str,
+                        retention, *, n_ranks: int, n_threads: int,
+                        structures, trace_paths: Sequence[str],
+                        trace_db: bool, timing: Optional[dict],
+                        workers, driver) -> Database:
+    """One-shot aggregation with a retention policy: aggregate to a
+    scratch database (under the selected driver), then apply the policy
+    in a single self-merge — the same fold the incremental path uses.
+    Like every merged directory, the output indexes traces solely via
+    ``trace.db`` (no per-trace ``.rtrc`` intermediates)."""
+    import shutil
+    import tempfile
+    from repro.core.merge import merge_databases
+
+    scratch = tempfile.mkdtemp(prefix="repro_retain_")
+    try:
+        aggregate(profile_paths, scratch, n_ranks=n_ranks,
+                  n_threads=n_threads, structures=structures,
+                  trace_paths=trace_paths, trace_db=trace_db,
+                  timing=timing, workers=workers, driver=driver)
+        return merge_databases([scratch], out_dir,
+                               n_workers=n_ranks * n_threads,
+                               trace_db=trace_db, retention=retention)
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    import sys
+    from repro.core.pipeline.cli import main
+    sys.exit(main())

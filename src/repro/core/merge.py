@@ -31,17 +31,25 @@ shard's per-profile inclusive values from the PMS cube (``read_pms``),
 grafts the shard trees into one union tree (``GlobalTree.merge_tree``
 replayed from the serialized arrays), remaps ctx ids through the
 composed ``shard -> union -> canonical`` map, and hands everything to
-the same ``_write_database`` writer ``aggregate()`` uses.
+the same ``write_database`` writer ``aggregate()`` uses.
 
-True multi-process parallelism falls out: shards of a measurement
-directory can be aggregated by *separate processes* (no shared GIL),
-then folded here — ``benchmarks/bench_merge.py`` measures exactly that
-against the one-shot wall-clock, and ``examples/continuous_profiling.py``
-demos the two production shapes (rank shards; epoch increments).
+Inputs need not live on disk: the parallel shard driver
+(``repro.core.pipeline.driver``) hands in-memory ``ShardResult``
+objects (phases 1-4 over a shard, no intermediate database), and the
+identical fold runs — that is what makes ``aggregate(..., workers=N)``
+byte-identical to serial by construction and faster in wall-clock
+(benchmarks/bench_pipeline.py measures it; bench_merge measures the
+on-disk variant).
+
+**Retention** (``repro.core.retention``): a ``RetentionPolicy`` filters
+the unioned profile multiset before the write — retiring epochs,
+deduplicating, capping profile count — and the tree is rebuilt from the
+survivors' recorded context coverage, so the retained database is
+byte-identical to re-aggregating the surviving profiles from scratch.
 
 CLI::
 
-    python -m repro.core.merge SHARD_DB... -o OUT_DB
+    python -m repro.core.merge SHARD_DB... -o OUT_DB [--retain SPEC]
 """
 from __future__ import annotations
 
@@ -50,13 +58,18 @@ import os
 import sys
 import time
 import warnings
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.aggregate import (Database, GlobalTree, _write_database,
-                                  apply_order, canonical_order)
 from repro.core.cct import Frame
+from repro.core.pipeline.contracts import ShardResult
+from repro.core.pipeline.database import (Database, ancestor_closure,
+                                          load_coverage, write_database)
+from repro.core.pipeline.unify import (GlobalTree, apply_order,
+                                       canonical_order)
+from repro.core.retention import RetentionPolicy, RetentionReport, \
+    apply_retention, parse_retention
 from repro.core.sparse import ProfileValues, read_pms
 from repro.core.trace import TraceData
 
@@ -83,6 +96,12 @@ class LoadedShard:
             raise ValueError(
                 f"{out_dir}: PMS profile planes do not match meta.json "
                 "profiles; refusing to merge a torn database")
+        # per-profile ctx coverage; databases written before coverage was
+        # recorded fall back to the ancestor closure of the nonzero ctxs
+        self.coverage: Dict[int, np.ndarray] = load_coverage(out_dir) or {
+            int(pv.profile_id): ancestor_closure(
+                pv.ctx.astype(np.int64), self.parents)
+            for pv in self.pvals}
         self.trace_lines: List[TraceData] = []
         tpath = db.trace_db_path()
         if load_traces and os.path.exists(tpath):
@@ -93,12 +112,18 @@ class LoadedShard:
                 for td in TraceDB(tpath).line_views()]
 
 
+ShardInput = Union[str, ShardResult, LoadedShard]
+
+
 # --------------------------------------------------------------------------
 # The merge driver
 # --------------------------------------------------------------------------
-def merge_databases(in_dirs: Sequence[str], out_dir: str, *,
+def merge_databases(in_dirs: Sequence[ShardInput], out_dir: str, *,
                     n_workers: int = 4,
-                    trace_db: bool = True) -> Database:
+                    trace_db: bool = True,
+                    retention: Optional[RetentionPolicy] = None,
+                    retention_report: Optional[RetentionReport] = None,
+                    remaps_out: Optional[list] = None) -> Database:
     """Fold N databases into one, byte-identical to a one-shot
     ``aggregate()`` over the union of their profiles.
 
@@ -106,7 +131,17 @@ def merge_databases(in_dirs: Sequence[str], out_dir: str, *,
     happens after the union), so any sharding of a measurement directory
     — and any merge tree over the shards — lands on the same bytes
     (property-tested in tests/test_merge_properties.py).  Profiles are
-    concatenated as a multiset; identities are not deduplicated.
+    concatenated as a multiset; identities are not deduplicated (unless
+    a ``retention`` policy asks for it).
+
+    Inputs are database directories or in-memory ``ShardResult`` objects
+    (the parallel shard driver's contract).  With ``retention``, the
+    unioned profile multiset is filtered and the tree restricted to the
+    survivors' coverage before writing — byte-identical to re-aggregating
+    the survivors (``repro.core.retention``); a ``retention_report``
+    instance, when given, is filled in place.  ``remaps_out``, when a
+    list, receives one ``shard ctx id -> output ctx id`` array per input
+    (unsupported together with ``retention``).
 
     The output is staged in a sibling temp dir and committed with a
     directory swap, so ``out_dir`` may be one of ``in_dirs`` (in-place
@@ -122,8 +157,14 @@ def merge_databases(in_dirs: Sequence[str], out_dir: str, *,
     if not in_dirs:
         raise ValueError("merge_databases: need at least one input "
                          "database")
+    if retention is not None and remaps_out is not None:
+        raise ValueError("merge_databases: remaps_out is not supported "
+                         "together with retention (retired contexts have "
+                         "no output id)")
     t0 = time.monotonic()
-    shards = [LoadedShard(d, load_traces=trace_db) for d in in_dirs]
+    shards = [sh if isinstance(sh, (ShardResult, LoadedShard))
+              else LoadedShard(sh, load_traces=trace_db)
+              for sh in in_dirs]
 
     metrics: List[str] = []
     for sh in shards:
@@ -137,27 +178,33 @@ def merge_databases(in_dirs: Sequence[str], out_dir: str, *,
                 f"from {metrics[:3]}...; databases must be measured with "
                 "identical metric registries to merge")
 
-    # union tree: graft every shard tree (LoadedShard duck-types the
+    # union tree: graft every shard tree (shard inputs duck-type the
     # frames/parents pair merge_tree consumes — the same reduction step
-    # hpcprof's rank fold uses, replayed from meta.json arrays), then
-    # canonicalize — the result is a pure function of the union node
-    # set, not of shard order
+    # hpcprof's rank fold uses, replayed from the serialized arrays),
+    # then canonicalize — the result is a pure function of the union
+    # node set, not of shard order
     union = GlobalTree()
     mappings = [union.merge_tree(sh) for sh in shards]
     new_id = canonical_order(union.frames, union.parents)
     frames_c, parents_c = apply_order(union.frames, union.parents, new_id)
     remaps = [new_id[m] for m in mappings]
 
-    # per-profile values: remap ctx through shard -> canonical-union ids.
-    # _write_database re-sorts rows and re-sorts profiles canonically, so
-    # shard order is irrelevant from here on.
-    profile_items: List[Tuple[dict, np.ndarray, np.ndarray, np.ndarray]] = []
+    # per-profile values: remap ctx (and coverage) through shard ->
+    # canonical-union ids.  write_database re-sorts rows and re-sorts
+    # profiles canonically, so shard order is irrelevant from here on.
+    entries: List[Tuple[dict, np.ndarray, np.ndarray, np.ndarray,
+                        np.ndarray]] = []
     for sh, remap in zip(shards, remaps):
         for pv in sh.pvals:
-            ctx = remap[pv.ctx.astype(np.int64)]
-            profile_items.append(
-                (sh.identities[int(pv.profile_id)], ctx,
-                 pv.metric.astype(np.int64), pv.values))
+            pid = int(pv.profile_id)
+            cover = sh.coverage.get(pid)
+            if cover is None:
+                cover = ancestor_closure(pv.ctx.astype(np.int64),
+                                         np.asarray(sh.parents, np.int64))
+            entries.append(
+                (sh.identities[pid], remap[pv.ctx.astype(np.int64)],
+                 pv.metric.astype(np.int64), pv.values,
+                 np.sort(remap[np.asarray(cover, np.int64)])))
 
     # trace.db: remap each shard's lines and re-merge (idempotent path)
     trace_lines: List[TraceData] = []
@@ -180,6 +227,14 @@ def merge_databases(in_dirs: Sequence[str], out_dir: str, *,
             trace_lines.append(TraceData(td.identity, td.starts, td.ends,
                                          ctx))
 
+    if retention is not None and not retention.is_noop:
+        entries, trace_lines, report = \
+            apply_retention(entries, trace_lines, retention)
+        if retention_report is not None:
+            retention_report.__dict__.update(report.__dict__)
+        frames_c, parents_c, entries, trace_lines = _restrict_tree(
+            frames_c, parents_c, entries, trace_lines)
+
     # stage the complete output in a sibling temp dir, then commit with a
     # directory swap (two renames).  This is what makes in-place epoch
     # extension safe — a crash never leaves out_dir as a half-written mix
@@ -192,9 +247,9 @@ def merge_databases(in_dirs: Sequence[str], out_dir: str, *,
     os.makedirs(parent, exist_ok=True)
     work_dir = tempfile.mkdtemp(prefix=".merge_staging_", dir=parent)
 
-    db = _write_database(work_dir, frames_c, parents_c, metrics,
-                         profile_items, n_workers=max(1, n_workers), t0=t0,
-                         timing_base={"merged_dbs": len(shards)})
+    db = write_database(work_dir, frames_c, parents_c, metrics,
+                        entries, n_workers=max(1, n_workers), t0=t0,
+                        timing_base={"merged_dbs": len(shards)})
     if trace_lines and trace_db:
         from repro.traceview.tracedb import build_db
         build_db(trace_lines, os.path.join(work_dir, "trace.db"))
@@ -217,8 +272,51 @@ def merge_databases(in_dirs: Sequence[str], out_dir: str, *,
         shutil.rmtree(backup, ignore_errors=True)
     else:
         os.rename(work_dir, out_abs)
+    if remaps_out is not None:
+        remaps_out.extend(remaps)
     return Database(out_dir, db.frames, db.parents, db.metrics,
                     db.profile_ids, db.stats)
+
+
+def _restrict_tree(frames: List[Frame], parents: np.ndarray, entries: list,
+                   trace_lines: List[TraceData]):
+    """Drop every context no surviving profile covers (and no surviving
+    mapped trace line references), then renumber canonically.
+
+    Coverage sets are parent-closed by construction (every profile path
+    node maps; expansion intermediates are ancestors of mapped nodes),
+    so the kept set is ancestor-closed and the compressed numbering of
+    an already-canonical tree stays canonical — the restricted tree is
+    exactly what re-aggregating the survivors builds (``canonical_order``
+    is re-run as cheap insurance).
+    """
+    n = len(frames)
+    referenced = [np.zeros(0, np.int64)]
+    for e in entries:
+        referenced.append(e[4])
+    for td in trace_lines:
+        if not td.identity.get("ctx_unmapped"):
+            referenced.append(np.asarray(td.ctx, np.int64))
+    keep_ids = ancestor_closure(np.concatenate(referenced),
+                                np.asarray(parents, np.int64))
+    sub = np.full(n, -1, np.int64)
+    sub[keep_ids] = np.arange(len(keep_ids))
+    frames_r = [frames[int(i)] for i in keep_ids]
+    parents_r = np.where(np.asarray(parents, np.int64)[keep_ids] >= 0,
+                         sub[np.asarray(parents, np.int64)[keep_ids]], -1)
+    new2 = canonical_order(frames_r, parents_r)
+    frames_r, parents_r = apply_order(frames_r, parents_r, new2)
+    conv = new2[sub]          # old id -> restricted canonical id (kept only)
+    entries = [(ident, conv[ctx], met, val, np.sort(conv[cover]))
+               for ident, ctx, met, val, cover in entries]
+    out_lines = []
+    for td in trace_lines:
+        if td.identity.get("ctx_unmapped"):
+            out_lines.append(td)
+        else:
+            out_lines.append(TraceData(td.identity, td.starts, td.ends,
+                                       conv[np.asarray(td.ctx, np.int64)]))
+    return frames_r, parents_r, entries, out_lines
 
 
 # --------------------------------------------------------------------------
@@ -261,14 +359,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="output database directory")
     ap.add_argument("--workers", type=int, default=4,
                     help="writer worker threads (default 4)")
+    ap.add_argument("--retain", default=None, metavar="SPEC",
+                    help="retention policy, e.g. 'last=2,max=64,dedup' "
+                         "(repro.core.retention)")
     ap.add_argument("--no-trace-db", action="store_true",
                     help="skip merging the shards' trace.db files (any "
                          "pre-existing OUT/trace.db is removed — its ctx "
                          "ids would be stale against the merged tree)")
     args = ap.parse_args(argv)
+    retention = parse_retention(args.retain) if args.retain else None
+    report = RetentionReport() if retention else None
     db = merge_databases(args.inputs, args.out, n_workers=args.workers,
-                         trace_db=not args.no_trace_db)
+                         trace_db=not args.no_trace_db,
+                         retention=retention, retention_report=report)
     print(summarize(db, args.inputs))
+    if report is not None:
+        print(report.summary())
     return 0
 
 

@@ -247,7 +247,13 @@ class TracingThread(threading.Thread):
             progressed = True
             recs = self.records.setdefault(stream, [])
             for act, placeholder in batch:
-                recs.append((act.t_start, act.t_end, placeholder.node_id))
+                # 4th column: the dispatching app thread (rides
+                # GpuActivity.meta from Profiler.dispatch) — write()
+                # stamps it into the stream trace so aggregation can
+                # convert the node id through that thread's gmap
+                tid = (act.meta or {}).get("dispatch_tid", -1)
+                recs.append((act.t_start, act.t_end, placeholder.node_id,
+                             tid))
                 if sink is not None:
                     sink(stream, act, placeholder)
             self.busy = False

@@ -37,7 +37,7 @@ from repro.core.monitor import (ACTIVITY, OP, GpuActivity, GpuOperation,
                                 MonitorThread)
 from repro.core.profmt import write_profile
 from repro.core.structure import HloModule, parse_hlo
-from repro.core.trace import TraceWriter
+from repro.core.trace import TraceWriter, pack_dispatch_ctx
 
 
 class _ThreadState:
@@ -182,7 +182,11 @@ class Profiler:
             t1 = self.clock()
             dur = duration_ns if duration_ns is not None else t1 - t0
             samples = None
-            meta = None
+            # the dispatching app thread rides the activity record: the
+            # tracing threads stamp it into GPU-stream trace events so
+            # aggregation can convert their app-thread CCT node ids
+            # through this thread's profile (pipeline.traceconv)
+            meta = {"dispatch_tid": threading.get_ident()}
             if kind == "kernel" and module_id in self._modules:
                 mod = self._modules[module_id]
                 if self.instrument:
@@ -193,8 +197,8 @@ class Profiler:
                 if self._counters is not None:
                     # the counter reading rides the activity record
                     # through the same SPSC channels (§4.1, §6)
-                    meta = {"counters": self._counters.read(
-                        mod, dur, self._module_costs.get(module_id))}
+                    meta["counters"] = self._counters.read(
+                        mod, dur, self._module_costs.get(module_id))
             act = GpuActivity(corr, kind, name, stream, t0, t0 + dur,
                               bytes=nbytes, samples=samples,
                               module_id=module_id, meta=meta)
@@ -328,16 +332,34 @@ class Profiler:
                                 f"profile_{fp}r{self.rank}_s{sid}.rpro")
             write_profile(path, cct, self.registry, ident, mods)
             out[f"gpu_{sid}"] = path
-        # GPU stream traces from the tracing threads
+        # GPU stream traces from the tracing threads.  Events carry the
+        # dispatching app thread's CCT node id; encode the dispatcher's
+        # thread index into the high ctx bits and name its profile in
+        # the identity, so aggregation converts every event through the
+        # right thread's gmap (no more ctx_unmapped pass-through).
+        tid_to_idx = {tid: i
+                      for i, tid in enumerate(sorted(self._threads))}
         for tt in self._monitor._trace_threads:
             for sid, recs in tt.records.items():
-                ident = identity(stream=sid, type="gpu")
+                arr = np.asarray(recs, np.int64).reshape(-1, 4)
+                idxs = np.asarray([tid_to_idx.get(int(t), -1)
+                                   for t in arr[:, 3]], np.int64)
+                if len(arr) and (idxs >= 0).all():
+                    ctx = pack_dispatch_ctx(idxs, arr[:, 2])
+                    used = sorted(set(idxs.tolist()))
+                    ident = identity(
+                        stream=sid, type="gpu",
+                        dispatch_profiles={
+                            str(i): f"profile_{fp}r{self.rank}_t{i}.rpro"
+                            for i in used})
+                else:   # dispatcher unknown: raw node ids, as before
+                    ctx = arr[:, 2]
+                    ident = identity(stream=sid, type="gpu")
                 tw = TraceWriter(
                     os.path.join(self.out_dir,
                                  f"trace_{fp}r{self.rank}_s{sid}.rtrc"),
                     ident)
-                arr = np.asarray(recs, np.uint64).reshape(-1, 3)
-                tw.append_many(arr[:, 0], arr[:, 1], arr[:, 2])
+                tw.append_many(arr[:, 0], arr[:, 1], ctx)
                 tw.close()
                 out[f"gpu_trace_{sid}"] = tw.path
         return out

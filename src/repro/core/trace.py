@@ -17,6 +17,24 @@ import numpy as np
 _REC = struct.Struct("<QQI")
 MAGIC = b"RTRC"
 
+# GPU-stream traces written by ``Profiler.write()`` record, per event,
+# the *dispatching app thread* alongside the CCT node: the thread index
+# rides the high ctx bits and the identity's ``dispatch_profiles`` maps
+# thread index -> profile basename.  Phase 5 of aggregation
+# (``repro.core.pipeline.traceconv``) converts each event through its
+# dispatcher's gmap — the fix for the former ``ctx_unmapped`` flagging
+# of profiler GPU-stream traces.
+DISPATCH_CTX_SHIFT = 32
+DISPATCH_CTX_MASK = (1 << DISPATCH_CTX_SHIFT) - 1
+
+
+def pack_dispatch_ctx(thread_idx, node_id):
+    """Encode (dispatcher thread index, CCT node id) into one ctx value
+    (array-friendly: accepts numpy arrays)."""
+    import numpy as _np
+    return ((_np.asarray(thread_idx, _np.uint64) << DISPATCH_CTX_SHIFT)
+            | _np.asarray(node_id, _np.uint64))
+
 
 class TraceWriter:
     def __init__(self, path: str, identity: dict):
@@ -95,6 +113,18 @@ def sorted_by_start(td: TraceData) -> TraceData:
         order = np.argsort(starts, kind="stable")
         starts, ends, ctx = starts[order], ends[order], ctx[order]
     return TraceData(td.identity, starts, ends, ctx)
+
+
+def read_trace_header(path: str) -> dict:
+    """Read just the JSON header (identity + out-of-order flag) without
+    touching the event data — what shard planning and dispatch
+    resolution need from a trace file."""
+    import json
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: not a trace file (bad magic)")
+        (n,) = struct.unpack("<I", f.read(4))
+        return json.loads(f.read(n))
 
 
 def read_trace(path: str) -> TraceData:

@@ -36,7 +36,8 @@ from typing import Iterable, List, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.trace import TraceData, read_trace, sorted_by_start
+from repro.core.trace import (DISPATCH_CTX_MASK, TraceData, read_trace,
+                              sorted_by_start)
 
 MAGIC = b"RTDB"
 VERSION = 1
@@ -57,6 +58,20 @@ def _line_key(identity: dict) -> tuple:
 Source = Union[str, TraceData]
 
 
+def _decode_dispatch(td: TraceData) -> TraceData:
+    """A raw GPU-stream trace from ``Profiler.write()`` encodes the
+    dispatching thread index in the high ctx bits (repro.core.trace).
+    Aggregation consumes that encoding (pipeline.traceconv); a trace.db
+    built straight from a measurement directory wants plain local node
+    ids, so strip it here — the pre-encoding behavior."""
+    if not td.identity.get("dispatch_profiles"):
+        return td
+    identity = {k: v for k, v in td.identity.items()
+                if k != "dispatch_profiles"}
+    ctx = np.asarray(td.ctx, np.int64) & DISPATCH_CTX_MASK
+    return TraceData(identity, td.starts, td.ends, ctx)
+
+
 def _load_sources(sources: Union[Source, Sequence[Source]]
                   ) -> List[TraceData]:
     """Expand sources into trace lines.  A source is a measurement
@@ -71,12 +86,12 @@ def _load_sources(sources: Union[Source, Sequence[Source]]
         if isinstance(src, TraceData):
             # materialized by the caller when the arrays view a file this
             # build may overwrite (sorted_by_start copies only if unsorted)
-            lines.append(src)
+            lines.append(_decode_dispatch(src))
         elif os.path.isdir(src):
             for p in sorted(glob.glob(os.path.join(src, "*.rtrc"))):
-                lines.append(read_trace(p))
+                lines.append(_decode_dispatch(read_trace(p)))
         elif src.endswith(".rtrc"):
-            lines.append(read_trace(src))
+            lines.append(_decode_dispatch(read_trace(src)))
         else:
             # materialize: line_views are zero-copy views into the mapped
             # file, which build_db may be about to overwrite in place

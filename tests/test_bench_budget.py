@@ -1,12 +1,17 @@
-"""benchmarks/run.py budget enforcement (ISSUE 3 satellite): a tracked
-benchmark exceeding its stated budget must fail the sweep loudly, naming
-the benchmark and stage — not just write BENCH_*.json."""
+"""benchmarks/run.py budget enforcement (ISSUE 3 satellite) and
+baseline comparison (ISSUE 5 satellite): a tracked benchmark exceeding
+its stated budget — or, under ``--compare``, regressing >25% against
+its committed BENCH_*.json baseline — must fail the sweep loudly,
+naming the benchmark and stage, not just write BENCH_*.json."""
+import json
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.run import ALL, TRACKED, budget_regressions  # noqa: E402
+from benchmarks.run import (ALL, COMPARE_TOLERANCE, TRACKED,  # noqa: E402
+                            baseline_regressions, budget_regressions,
+                            load_baseline)
 
 
 def test_budget_regression_messages_name_bench_and_stage():
@@ -47,3 +52,69 @@ def test_merge_benchmark_is_tracked_with_budget():
         "merge_under_budget": False,
         "merge_budget_s": bench_merge.MERGE_BUDGET_S})
     assert len(msgs) == 1 and "merge" in msgs[0]
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 5: bench_pipeline tracking + --compare baseline regression gate
+# ---------------------------------------------------------------------------
+def test_pipeline_benchmark_is_tracked_with_speedup_budget():
+    from benchmarks import bench_pipeline
+    assert "pipeline" in ALL and "pipeline" in TRACKED
+    assert bench_pipeline.SPEEDUP_BUDGET_MIN_X >= 1.8
+    msgs = budget_regressions("pipeline", {
+        "speedup_under_budget": False,
+        "speedup_budget_min_x": bench_pipeline.SPEEDUP_BUDGET_MIN_X})
+    assert len(msgs) == 1 and "pipeline" in msgs[0] and "speedup" in msgs[0]
+
+
+def test_committed_pipeline_baseline_exists():
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    base = load_baseline(repo, "pipeline")
+    assert base.get("bench") == "pipeline"
+    assert base["results"]["byte_identical"] is True
+    assert base["results"]["speedup_4w_x"] >= 1.8
+
+
+def test_baseline_regression_over_tolerance_fails():
+    base = {"small": False,
+            "results": {"merge_s": 1.0, "one_shot_s": 4.0}}
+    new = {"merge_s": 1.0 * (1 + COMPARE_TOLERANCE) + 0.01,
+           "one_shot_s": 4.0}
+    msgs = baseline_regressions("merge", new, base, small=False)
+    assert len(msgs) == 1
+    assert "merge" in msgs[0] and "merge_s regressed" in msgs[0]
+    assert "1.000s" in msgs[0]
+
+
+def test_baseline_within_tolerance_passes():
+    base = {"small": False, "results": {"raster_s": 1.0}}
+    assert baseline_regressions(
+        "traceview", {"raster_s": 1.2}, base, small=False) == []
+
+
+def test_baseline_skips_constants_and_nonmeasurements():
+    """Budget bounds and pinned seed numbers are constants — raising a
+    budget must never read as a perf regression; speedups (_x) are
+    higher-better and not stage times."""
+    base = {"small": False,
+            "results": {"merge_budget_s": 2.0, "seed_merge_s": 0.3,
+                        "speedup_4w_x": 3.0, "merge_s": 1.0}}
+    new = {"merge_budget_s": 99.0, "seed_merge_s": 99.0,
+           "speedup_4w_x": 1.0, "merge_s": 1.0}
+    assert baseline_regressions("merge", new, base, small=False) == []
+
+
+def test_baseline_size_mismatch_and_missing_are_skipped():
+    base = {"small": False, "results": {"merge_s": 0.1}}
+    assert baseline_regressions("merge", {"merge_s": 9.9}, base,
+                                small=True) == []
+    assert baseline_regressions("merge", {"merge_s": 9.9}, {},
+                                small=False) == []
+
+
+def test_load_baseline_roundtrip(tmp_path):
+    path = tmp_path / "BENCH_x.json"
+    path.write_text(json.dumps({"bench": "x", "small": False,
+                                "results": {"a_s": 1.0}}))
+    assert load_baseline(str(tmp_path), "x")["results"]["a_s"] == 1.0
+    assert load_baseline(str(tmp_path), "missing") == {}

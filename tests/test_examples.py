@@ -36,7 +36,9 @@ def test_every_example_is_collected():
     assert "quickstart.py" in names
     assert "continuous_profiling.py" in names, \
         "ISSUE 4 demo must exist and be smoked"
-    assert len(EXAMPLES) >= 9
+    assert "parallel_aggregate.py" in names, \
+        "ISSUE 5 demo must exist and be smoked"
+    assert len(EXAMPLES) >= 10
 
 
 @pytest.mark.parametrize(

@@ -91,8 +91,14 @@ def fixture_db(tmp_path_factory):
         tw.append(900, 1000, ph2.node_id)
         tw.close()
         traces.append(tw.path)
+        # GPU-stream trace as Profiler.write() emits it: app-thread node
+        # ids with the dispatching thread encoded (index 0 -> the ids
+        # pass through numerically) and named in dispatch_profiles, so
+        # aggregation converts them through the thread profile's gmap
         gw = TraceWriter(str(tmp / f"trace_r{r}_s0.rtrc"),
-                         {"rank": r, "stream": 0, "type": "gpu"})
+                         {"rank": r, "stream": 0, "type": "gpu",
+                          "dispatch_profiles":
+                              {"0": f"profile_r{r}_t0.rpro"}})
         gw.append(400, 700 + 50 * r, ph.node_id)
         gw.append(900, 960, ph2.node_id)
         gw.close()

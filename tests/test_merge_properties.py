@@ -8,7 +8,11 @@ The merge contract, stated as algebra over randomized profile sets:
 - **associativity**: any merge tree over the shards lands on the same
   bytes as the flat merge;
 - **incrementality**: ``aggregate(new, base_db=...)`` at any split point
-  equals the one-shot.
+  equals the one-shot;
+- **driver invariance** (ISSUE 5): the serial / thread / process shard
+  drivers, at any worker count, land on the same bytes — databases AND
+  converted traces (the pipeline driver is the sharding above run by an
+  executor and folded through ``merge_databases``).
 
 Hypothesis draws the profile set (seed), the shard assignment, and the
 shard permutation; the pinned ``test_properties_hold_on_fixed_example``
@@ -85,6 +89,23 @@ def check_incremental(tmp, seed, n_profiles, split):
     assert db_bytes(inc) == db_bytes(one)
 
 
+def check_driver_invariance(tmp, seed, n_profiles, driver, workers):
+    """ISSUE 5: every shard driver at any worker count lands on the
+    serial one-shot bytes — database files, meta, and the converted
+    per-trace outputs."""
+    import os
+    paths, one = _build(tmp, seed, n_profiles=n_profiles)
+    out = str(tmp / f"drv_{driver}_{workers}")
+    aggregate(paths, out, trace_paths=traces_of(paths),
+              driver=driver, workers=workers)
+    assert db_bytes(out) == db_bytes(one)
+    assert meta_of(out) == meta_of(one)
+    for t in traces_of(paths):
+        b = os.path.basename(t)
+        assert open(os.path.join(out, b), "rb").read() == \
+            open(os.path.join(one, b), "rb").read()
+
+
 @given(st.integers(0, 10_000),
        st.lists(st.integers(0, 3), min_size=2, max_size=6),
        st.booleans())
@@ -110,6 +131,17 @@ def test_incremental_equals_one_shot_property(tmp_path_factory, seed,
                       split)
 
 
+@given(st.integers(0, 10_000), st.integers(2, 7),
+       st.sampled_from(["serial", "thread", "process"]),
+       st.integers(1, 5))
+@settings(max_examples=6, deadline=None)
+def test_any_driver_any_worker_count_is_byte_identical(tmp_path_factory,
+                                                       seed, n_profiles,
+                                                       driver, workers):
+    check_driver_invariance(tmp_path_factory.mktemp("drv"), seed,
+                            n_profiles, driver, workers)
+
+
 def test_properties_hold_on_fixed_example(tmp_path):
     """The property bodies on one pinned draw — runs with or without
     hypothesis installed."""
@@ -117,6 +149,8 @@ def test_properties_hold_on_fixed_example(tmp_path):
                               shard_of=[0, 2, 1, 0, 2], reverse=True)
     check_associativity(tmp_path / "b", seed=8, shard_of=[1, 0, 2, 1])
     check_incremental(tmp_path / "c", seed=9, n_profiles=4, split=2)
+    check_driver_invariance(tmp_path / "d", seed=10, n_profiles=5,
+                            driver="process", workers=3)
 
 
 def test_property_suite_active_when_hypothesis_present():

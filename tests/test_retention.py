@@ -1,0 +1,292 @@
+"""Merge-time retention policies (ISSUE 5 tentpole: windowed databases,
+dedup/compaction for continuous profiling).
+
+The pinned contract: **retiring epochs through a RetentionPolicy is
+byte-identical to re-aggregating the surviving profile set from
+scratch** (stats, cms, pms, trace.db, meta — the database never betrays
+that it once held more), and dedup is idempotent.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.aggregate import aggregate
+from repro.core.cct import CCT, Frame, HOST, PLACEHOLDER
+from repro.core.merge import main as merge_main, merge_databases
+from repro.core.metrics import default_registry
+from repro.core.profmt import write_profile
+from repro.core.retention import (RetentionPolicy, apply_retention,
+                                  epoch_key, parse_retention)
+from repro.core.trace import TraceWriter
+from test_merge import assert_db_identical, db_bytes, traces_of
+
+
+# ---------------------------------------------------------------------------
+# Fixtures: tagged epochs of a continuously-profiled 2-rank job
+# ---------------------------------------------------------------------------
+def write_epoch(tmp_path, epoch, n_ranks=2, scale=1.0):
+    """One epoch's measurement: per rank a profile + aligned trace, both
+    stamped with the epoch tag (what ``Profiler(tag=...)`` produces)."""
+    reg = default_registry()
+    paths = []
+    for r in range(n_ranks):
+        cct = CCT()
+        main = cct.insert_path([Frame(HOST, "main", "app.py", 1)])
+        step = cct.insert_path(
+            [Frame(HOST, f"step_e{epoch}", "app.py", 10 + epoch)],
+            parent=main)
+        ph = cct.get_or_insert(step, Frame(PLACEHOLDER, "kernel:train",
+                                           "0", 0))
+        ph.metrics.add(reg.kind("gpu_kernel"), "invocations", 1.0 + r)
+        ph.metrics.add(reg.kind("gpu_kernel"), "time_ns",
+                       scale * 100.0 * (r + 1) * epoch)
+        main.metrics.add(reg.kind("cpu"), "time_ns", 1000.0 * epoch)
+        ident = {"rank": r, "thread": 0, "type": "cpu",
+                 "tag": f"epoch{epoch}"}
+        p = str(tmp_path / f"profile_epoch{epoch}_r{r}_t0.rpro")
+        write_profile(p, cct, reg, ident, [])
+        tw = TraceWriter(p.replace(".rpro", ".rtrc"), ident)
+        tw.append(1000 * epoch, 1000 * epoch + 50, step.node_id)
+        tw.append(1000 * epoch + 50, 1000 * epoch + 80, ph.node_id)
+        tw.close()
+        paths.append(p)
+    return paths
+
+
+def build_epochs(tmp_path, epochs):
+    by_epoch = {e: write_epoch(tmp_path, e) for e in epochs}
+    merged = str(tmp_path / "db_all")
+    all_paths = [p for e in epochs for p in by_epoch[e]]
+    aggregate(all_paths, merged, trace_paths=traces_of(all_paths))
+    return by_epoch, merged
+
+
+def expect_db(tmp_path, name, paths):
+    out = str(tmp_path / name)
+    aggregate(paths, out, trace_paths=traces_of(paths))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Policy parsing + epoch ordering
+# ---------------------------------------------------------------------------
+def test_parse_retention_specs():
+    p = parse_retention("last=2,max=64,dedup,since=epoch3")
+    assert p == RetentionPolicy(keep_last_epochs=2, since_epoch="epoch3",
+                                max_profiles=64, dedup=True)
+    assert parse_retention("dedup").dedup
+    assert parse_retention("last=1") == RetentionPolicy(keep_last_epochs=1)
+    for bad in ("keep=2", "last", "dedup=yes", "last=x"):
+        with pytest.raises(ValueError):
+            parse_retention(bad)
+    with pytest.raises(ValueError, match=">= 1"):
+        RetentionPolicy(max_profiles=0)
+    assert RetentionPolicy().is_noop
+    assert not RetentionPolicy(dedup=True).is_noop
+
+
+def test_epoch_key_natural_order():
+    tags = ["epoch10", "epoch2", "epoch1"]
+    assert sorted(tags, key=epoch_key) == ["epoch1", "epoch2", "epoch10"]
+    assert epoch_key("e2s3") < epoch_key("e2s10")
+
+
+# ---------------------------------------------------------------------------
+# The pinned contract: retire epochs == re-aggregate the survivors
+# ---------------------------------------------------------------------------
+def test_keep_last_epochs_equals_reaggregation(tmp_path):
+    by_epoch, merged = build_epochs(tmp_path, [1, 2, 3])
+    out = str(tmp_path / "retained")
+    db = merge_databases([merged], out,
+                         retention=RetentionPolicy(keep_last_epochs=2))
+    want = expect_db(tmp_path, "want", by_epoch[2] + by_epoch[3])
+    assert_db_identical(out, want)
+    tags = {v.get("tag") for v in db.profile_ids.values()}
+    assert tags == {"epoch2", "epoch3"}
+
+
+def test_since_epoch_window_equals_reaggregation(tmp_path):
+    by_epoch, merged = build_epochs(tmp_path, [1, 2, 3])
+    out = str(tmp_path / "since")
+    merge_databases([merged], out,
+                    retention=RetentionPolicy(since_epoch="epoch2"))
+    want = expect_db(tmp_path, "want", by_epoch[2] + by_epoch[3])
+    assert_db_identical(out, want)
+
+
+def test_epochs_retire_in_natural_order(tmp_path):
+    """epoch10 is newer than epoch2 (no lexicographic trap)."""
+    by_epoch, merged = build_epochs(tmp_path, [2, 10])
+    out = str(tmp_path / "nat")
+    db = merge_databases([merged], out,
+                         retention=RetentionPolicy(keep_last_epochs=1))
+    assert {v["tag"] for v in db.profile_ids.values()} == {"epoch10"}
+    assert_db_identical(out, expect_db(tmp_path, "want", by_epoch[10]))
+
+
+def test_max_profiles_retires_whole_oldest_epochs(tmp_path):
+    by_epoch, merged = build_epochs(tmp_path, [1, 2, 3])   # 6 profiles
+    out = str(tmp_path / "capped")
+    db = merge_databases([merged], out,
+                         retention=RetentionPolicy(max_profiles=4))
+    assert len(db.profile_ids) == 4
+    assert_db_identical(out, expect_db(tmp_path, "want",
+                                       by_epoch[2] + by_epoch[3]))
+
+
+def test_max_profiles_caps_within_single_epoch(tmp_path):
+    paths = write_epoch(tmp_path, 1, n_ranks=4)
+    merged = str(tmp_path / "db")
+    aggregate(paths, merged, trace_paths=traces_of(paths))
+    out = str(tmp_path / "capped")
+    db = merge_databases([merged], out,
+                         retention=RetentionPolicy(max_profiles=2))
+    # canonically-first (lowest rank) profiles drop; traces stay
+    # (epoch-granular trace retention, documented)
+    assert len(db.profile_ids) == 2
+    assert {v["rank"] for v in db.profile_ids.values()} == {2, 3}
+
+
+def test_untagged_profiles_survive_epoch_policies(tmp_path):
+    from test_aggregate_equiv import synth_inputs
+    untagged, _ = synth_inputs(tmp_path, seed=70, n_profiles=2,
+                               with_traces=False)
+    tagged = write_epoch(tmp_path, 1)
+    merged = str(tmp_path / "db")
+    aggregate(untagged + tagged, merged, trace_paths=traces_of(tagged))
+    out = str(tmp_path / "out")
+    db = merge_databases([merged], out,
+                         retention=RetentionPolicy(since_epoch="epoch9"))
+    assert len(db.profile_ids) == 2
+    assert all("tag" not in v for v in db.profile_ids.values())
+
+
+# ---------------------------------------------------------------------------
+# Dedup / compaction
+# ---------------------------------------------------------------------------
+def test_dedup_is_idempotent_and_collapses_self_merge(tmp_path):
+    paths = write_epoch(tmp_path, 1)
+    a = str(tmp_path / "a")
+    aggregate(paths, a, trace_paths=traces_of(paths))
+    dd = RetentionPolicy(dedup=True)
+    once = str(tmp_path / "once")
+    merge_databases([a, a], once, retention=dd)       # multiset doubled...
+    assert_db_identical(once, a)                      # ...dedup restores a
+    twice = str(tmp_path / "twice")
+    merge_databases([once], twice, retention=dd)      # idempotent
+    assert_db_identical(twice, once)
+
+
+def test_dedup_keeps_canonically_first_of_identical_identities(tmp_path):
+    (tmp_path / "m1").mkdir()
+    (tmp_path / "m2").mkdir()
+    e1 = write_epoch(tmp_path / "m1", 1)
+    e1b = write_epoch(tmp_path / "m2", 1, scale=7.0)  # same identities!
+    (entries_in, lines, report) = _entries_of(tmp_path, e1 + e1b)
+    items, _, rep = apply_retention(entries_in, [],
+                                    RetentionPolicy(dedup=True))
+    assert rep.deduped_profiles == 2
+    assert len(items) == 2
+
+
+def _entries_of(tmp_path, paths):
+    db_dir = str(tmp_path / "entries_db")
+    aggregate(paths, db_dir)
+    from repro.core.merge import LoadedShard
+    sh = LoadedShard(db_dir)
+    entries = [(sh.identities[int(pv.profile_id)],
+                pv.ctx.astype(np.int64), pv.metric.astype(np.int64),
+                pv.values, sh.coverage[int(pv.profile_id)])
+               for pv in sh.pvals]
+    return entries, [], None
+
+
+def test_retired_contexts_leave_no_trace_in_meta(tmp_path):
+    """The whole point of coverage: a context only ever touched by a
+    retired epoch is gone from the retained tree."""
+    by_epoch, merged = build_epochs(tmp_path, [1, 2])
+    out = str(tmp_path / "r")
+    db = merge_databases([merged], out,
+                         retention=RetentionPolicy(keep_last_epochs=1))
+    names = {f.name for f in db.frames}
+    assert "step_e2" in names and "step_e1" not in names
+
+
+# ---------------------------------------------------------------------------
+# Wiring: aggregate(retention=...), incremental epochs, CLI
+# ---------------------------------------------------------------------------
+def test_aggregate_retention_one_shot(tmp_path):
+    by_epoch = {e: write_epoch(tmp_path, e) for e in (1, 2, 3)}
+    all_paths = [p for e in (1, 2, 3) for p in by_epoch[e]]
+    out = str(tmp_path / "db")
+    aggregate(all_paths, out, trace_paths=traces_of(all_paths),
+              retention=RetentionPolicy(keep_last_epochs=1), workers=2,
+              driver="thread")
+    assert_db_identical(out, expect_db(tmp_path, "want", by_epoch[3]))
+
+
+def test_continuous_profiling_loop_with_retention_window(tmp_path):
+    """The production shape: each epoch extends the database in place with
+    ``base_db`` + a keep-last-2 window; at every step the database is
+    byte-identical to re-aggregating the two newest epochs."""
+    by_epoch = {e: write_epoch(tmp_path, e) for e in (1, 2, 3, 4)}
+    db_dir = str(tmp_path / "db")
+    policy = RetentionPolicy(keep_last_epochs=2)
+    aggregate(by_epoch[1], db_dir, trace_paths=traces_of(by_epoch[1]))
+    for e in (2, 3, 4):
+        aggregate(by_epoch[e], db_dir, base_db=db_dir,
+                  trace_paths=traces_of(by_epoch[e]), retention=policy)
+        survivors = [p for ee in (max(1, e - 1), e) for p in by_epoch[ee]]
+        want = expect_db(tmp_path, f"want{e}", survivors)
+        assert_db_identical(db_dir, want)
+
+
+def test_merge_cli_retain_flag(tmp_path, capsys):
+    by_epoch, merged = build_epochs(tmp_path, [1, 2, 3])
+    out = str(tmp_path / "out")
+    rc = merge_main([merged, "-o", out, "--retain", "last=1"])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "retention: kept 2 profile(s)" in text
+    assert "epochs retired: epoch1 epoch2" in text
+    assert "profiles: 2" in text
+
+
+def test_aggregate_cli_retain_flag(tmp_path, capsys):
+    from repro.core.pipeline.cli import main as cli_main
+    (tmp_path / "m").mkdir()
+    for e in (1, 2):
+        write_epoch(tmp_path / "m", e)
+    out = str(tmp_path / "db")
+    rc = cli_main([str(tmp_path / "m"), "-o", out, "--retain", "last=1"])
+    assert rc == 0
+    assert "profiles: 2" in capsys.readouterr().out
+
+
+def test_retention_rejects_remaps_out():
+    with pytest.raises(ValueError, match="remaps_out"):
+        merge_databases(["x"], "y", retention=RetentionPolicy(dedup=True),
+                        remaps_out=[])
+
+
+def test_legacy_database_without_coverage_still_merges(tmp_path):
+    """Databases written before coverage.npz existed fall back to the
+    ancestor closure of their nonzero ctxs."""
+    paths = write_epoch(tmp_path, 1)
+    a = str(tmp_path / "a")
+    aggregate(paths, a, trace_paths=traces_of(paths))
+    os.remove(os.path.join(a, "coverage.npz"))
+    out = str(tmp_path / "out")
+    db = merge_databases([a], out,
+                         retention=RetentionPolicy(keep_last_epochs=1))
+    assert len(db.profile_ids) == 2
+    assert db_bytes(out)["stats.npz"] == db_bytes(a)["stats.npz"]
+
+
+def test_retention_report_summary():
+    entries, lines, _ = [], [], None
+    items, lns, rep = apply_retention(entries, lines,
+                                      RetentionPolicy(dedup=True))
+    assert items == [] and lns == []
+    assert rep.summary().startswith("retention: kept 0 profile(s)")
