@@ -1,0 +1,135 @@
+"""Fleet ingest throughput + crash-recovery replay time (ISSUE 6).
+
+Two numbers the aggregation daemon must keep honest:
+
+- ``ingest_s`` — the full admit+fold pipeline for a batch of delivered
+  envelopes (verify SHA-256, unpack, journal, one merge commit), the
+  steady-state cost of a fleet poll (budgeted, throughput reported as
+  ``shards_per_s``);
+- ``recovery_s`` — a restart after a crash *between the fold commit and
+  spool cleanup* (the worst replay window: the journal already records
+  every shard, so recovery must dedup the entire spool and touch the
+  database not at all), budgeted well below the ingest cost since a
+  crash-looping daemon pays it on every relaunch.
+
+Byte-identity against the one-shot ``aggregate()`` over the same
+profiles is asserted every repeat — the throughput is meaningless if
+the bytes drift.
+
+``SEED_BASELINE`` pins the first measurement of this subsystem (this
+container, best of ``repeats``) so the cross-PR trajectory is visible
+in ``BENCH_fleet.json``.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+from repro.core.aggregate import aggregate
+from repro.fleet import DirectoryTransport, FleetDaemon, ShardProducer
+from repro.fleet.daemon import FP_FOLD_POST_COMMIT
+from repro.ft import inject
+
+from benchmarks.bench_aggregation import make_inputs
+
+INGEST_BUDGET_S = 3.0       # 4-envelope admit+fold @ 16 profiles
+RECOVERY_BUDGET_S = 0.5     # journal replay must be ~free vs the fold
+
+# First measurement of the fleet subsystem (PR 6, this container, best
+# of 3): 16 profiles across 4 producer envelopes.
+SEED_BASELINE = {
+    "n_profiles": 16,
+    "ingest_s": 0.40,
+    "recovery_s": 0.005,
+}
+
+
+def _db_bytes(d: str):
+    return {fn: open(os.path.join(d, fn), "rb").read()
+            for fn in ("stats.npz", "metrics.cms", "metrics.pms")}
+
+
+def run(n_profiles: int = 16, n_shards: int = 4, repeats: int = 3):
+    tmp = tempfile.mkdtemp(prefix="repro_fleet_")
+    paths = make_inputs(n_profiles, tmp)
+    shard_dirs = []
+    for s in range(n_shards):
+        d = os.path.join(tmp, f"shard_{s}")
+        aggregate(paths[s::n_shards], d)
+        shard_dirs.append(d)
+    one = os.path.join(tmp, "one_shot")
+    aggregate(paths, one)
+
+    best = None
+    for rep in range(max(1, repeats)):
+        r = {}
+        db = os.path.join(tmp, f"fleet_{rep}")
+        spool = os.path.join(tmp, f"spool_{rep}")
+        daemon = FleetDaemon(db, spool, n_workers=1)
+        producer = ShardProducer(
+            os.path.join(tmp, f"outbox_{rep}"),
+            DirectoryTransport(daemon.incoming_dir),
+            producer="bench", sleep=lambda s: None)
+        for i, sd in enumerate(shard_dirs):
+            producer.stage(sd, epoch=i)
+        producer.deliver()
+
+        t0 = time.perf_counter()
+        report = daemon.poll_once()
+        r["ingest_s"] = time.perf_counter() - t0
+        assert len(report.applied) == n_shards
+        assert _db_bytes(db) == _db_bytes(one), \
+            "fleet fold diverged from one-shot aggregate()"
+        r["shards_per_s"] = n_shards / r["ingest_s"]
+
+        # recovery replay: redeliver everything, crash after the fold
+        # commit (pending spool full, journal complete), restart
+        for i, sd in enumerate(shard_dirs):
+            producer.stage(sd, epoch=i)
+        producer.deliver()
+        shutil.rmtree(db)
+        with inject.injected(FP_FOLD_POST_COMMIT):
+            try:
+                FleetDaemon(db, spool, n_workers=1).poll_once()
+            except inject.InjectedCrash:
+                pass
+        t0 = time.perf_counter()
+        recovered = FleetDaemon(db, spool, n_workers=1).poll_once()
+        r["recovery_s"] = time.perf_counter() - t0
+        assert not recovered.applied \
+            and len(recovered.replay_cleaned) == n_shards
+        assert _db_bytes(db) == _db_bytes(one)
+
+        if best is None or r["ingest_s"] < best["ingest_s"]:
+            best = r
+
+    out = {
+        "n_profiles": n_profiles,
+        "n_shards": n_shards,
+        **best,
+        "byte_identical": True,     # asserted above, every repeat
+        "ingest_under_budget": bool(best["ingest_s"] < INGEST_BUDGET_S),
+        "ingest_budget_s": INGEST_BUDGET_S,
+        "recovery_under_budget": bool(
+            best["recovery_s"] < RECOVERY_BUDGET_S),
+        "recovery_budget_s": RECOVERY_BUDGET_S,
+    }
+    if n_profiles == SEED_BASELINE["n_profiles"]:
+        out["seed_ingest_s"] = SEED_BASELINE["ingest_s"]
+        out["seed_recovery_s"] = SEED_BASELINE["recovery_s"]
+        out["ingest_vs_seed_x"] = \
+            SEED_BASELINE["ingest_s"] / best["ingest_s"]
+    return out
+
+
+def main(small: bool = False):
+    r = run(n_profiles=6, n_shards=3, repeats=1) if small else run()
+    for k, v in r.items():
+        print(f"bench_fleet,{k},{v}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

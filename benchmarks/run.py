@@ -17,9 +17,9 @@ import time
 import traceback
 
 from benchmarks import (bench_aggregation, bench_channels, bench_counters,
-                        bench_merge, bench_overhead, bench_pipeline,
-                        bench_reconstruction, bench_roofline, bench_sparse,
-                        bench_traceview)
+                        bench_fleet, bench_merge, bench_overhead,
+                        bench_pipeline, bench_reconstruction, bench_roofline,
+                        bench_sparse, bench_traceview)
 
 ALL = {
     "channels": bench_channels,        # §4.1 wait-free channels
@@ -32,11 +32,12 @@ ALL = {
     "counters": bench_counters,        # §6 counter schedule + merge
     "merge": bench_merge,              # ISSUE 4 sharded/incremental merge
     "pipeline": bench_pipeline,        # ISSUE 5 shard-driver scaling
+    "fleet": bench_fleet,              # ISSUE 6 daemon ingest + recovery
 }
 
 # benchmarks whose results are persisted as BENCH_<name>.json
 TRACKED = ("aggregation", "channels", "traceview", "counters", "merge",
-           "pipeline")
+           "pipeline", "fleet")
 
 # --compare: a tracked stage time growing more than this fraction over
 # its committed BENCH_<name>.json baseline fails the sweep

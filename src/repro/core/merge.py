@@ -72,6 +72,19 @@ from repro.core.retention import RetentionPolicy, RetentionReport, \
     apply_retention, parse_retention
 from repro.core.sparse import ProfileValues, read_pms
 from repro.core.trace import TraceData
+from repro.ft import inject
+
+# Labeled crash points on the commit path (ISSUE 6): the fleet crash
+# matrix kills the merging process at each of these and asserts the
+# intact-or-previous guarantee plus journal replay (docs/fleet.md).
+FP_COMMIT_PRE_SWAP = "merge.commit.pre_swap"
+FP_COMMIT_MID_SWAP = "merge.commit.mid_swap"
+FP_COMMIT_POST_SWAP = "merge.commit.post_swap"
+inject.register_points(FP_COMMIT_PRE_SWAP, FP_COMMIT_MID_SWAP,
+                       FP_COMMIT_POST_SWAP)
+
+PRE_MERGE_SUFFIX = ".pre-merge"
+STAGING_PREFIX = ".merge_staging_"
 
 
 # --------------------------------------------------------------------------
@@ -123,7 +136,9 @@ def merge_databases(in_dirs: Sequence[ShardInput], out_dir: str, *,
                     trace_db: bool = True,
                     retention: Optional[RetentionPolicy] = None,
                     retention_report: Optional[RetentionReport] = None,
-                    remaps_out: Optional[list] = None) -> Database:
+                    remaps_out: Optional[list] = None,
+                    extra_files: Optional[Dict[str, bytes]] = None
+                    ) -> Database:
     """Fold N databases into one, byte-identical to a one-shot
     ``aggregate()`` over the union of their profiles.
 
@@ -148,11 +163,17 @@ def merge_databases(in_dirs: Sequence[ShardInput], out_dir: str, *,
     epoch extension — every input is fully materialized before anything
     is written) and a crash mid-merge never leaves a half-written mix of
     old and new files: the worst case is the old database parked at
-    ``out_dir + ".pre-merge"`` (cleaned up on the next merge).  A merged
-    directory indexes traces solely via ``trace.db`` — the per-trace
-    ``.rtrc`` intermediates a one-shot ``aggregate()`` leaves are not
-    reproduced (and any stale ones in a replaced ``out_dir`` go away
-    with it).
+    ``out_dir + ".pre-merge"`` (cleaned up on the next merge, or by
+    ``recover_interrupted_swap``).  A merged directory indexes traces
+    solely via ``trace.db`` — the per-trace ``.rtrc`` intermediates a
+    one-shot ``aggregate()`` leaves are not reproduced (and any stale
+    ones in a replaced ``out_dir`` go away with it).
+
+    ``extra_files`` (name -> bytes) are written into the staged output
+    *before* the swap, so they commit atomically with the database —
+    this is how the fleet daemon's ingest journal rides the fold
+    (``repro.fleet.journal``): there is no crash schedule that applies
+    shards without journaling them, or vice versa.
     """
     if not in_dirs:
         raise ValueError("merge_databases: need at least one input "
@@ -245,7 +266,7 @@ def merge_databases(in_dirs: Sequence[ShardInput], out_dir: str, *,
     out_abs = os.path.abspath(out_dir)
     parent = os.path.dirname(out_abs) or "."
     os.makedirs(parent, exist_ok=True)
-    work_dir = tempfile.mkdtemp(prefix=".merge_staging_", dir=parent)
+    work_dir = tempfile.mkdtemp(prefix=STAGING_PREFIX, dir=parent)
 
     db = write_database(work_dir, frames_c, parents_c, metrics,
                         entries, n_workers=max(1, n_workers), t0=t0,
@@ -253,8 +274,14 @@ def merge_databases(in_dirs: Sequence[ShardInput], out_dir: str, *,
     if trace_lines and trace_db:
         from repro.traceview.tracedb import build_db
         build_db(trace_lines, os.path.join(work_dir, "trace.db"))
+    for name, data in (extra_files or {}).items():
+        with open(os.path.join(work_dir, name), "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
 
-    backup = out_abs + ".pre-merge"
+    inject.fault_point(FP_COMMIT_PRE_SWAP)
+    backup = out_abs + PRE_MERGE_SUFFIX
     if os.path.lexists(backup):       # leftover of a crashed prior merge
         shutil.rmtree(backup, ignore_errors=True)
     if os.path.lexists(out_abs):
@@ -268,14 +295,46 @@ def merge_databases(in_dirs: Sequence[ShardInput], out_dir: str, *,
                 f"{out_dir}: exists and is not a database directory "
                 "(no meta.json); refusing to replace it")
         os.rename(out_abs, backup)
+        inject.fault_point(FP_COMMIT_MID_SWAP)
         os.rename(work_dir, out_abs)
+        inject.fault_point(FP_COMMIT_POST_SWAP)
         shutil.rmtree(backup, ignore_errors=True)
     else:
         os.rename(work_dir, out_abs)
+        inject.fault_point(FP_COMMIT_POST_SWAP)
     if remaps_out is not None:
         remaps_out.extend(remaps)
     return Database(out_dir, db.frames, db.parents, db.metrics,
                     db.profile_ids, db.stats)
+
+
+def recover_interrupted_swap(out_dir: str) -> Optional[str]:
+    """Repair the directory state a merge killed mid-commit leaves
+    behind — the restart half of the intact-or-previous guarantee.
+
+    Returns what was done (``"restored"`` — the previous database was
+    parked at ``<out>.pre-merge`` with nothing at ``out_dir``, so it is
+    renamed back; ``"cleaned"`` — the swap completed but the backup's
+    removal didn't, so the stale backup is dropped) or ``None`` when the
+    state is already consistent.  Always sweeps dead staging
+    directories.  The fleet daemon runs this before every poll
+    (``repro.fleet.daemon``)."""
+    import shutil
+    out_abs = os.path.abspath(out_dir)
+    parent = os.path.dirname(out_abs) or "."
+    if os.path.isdir(parent):
+        for fn in os.listdir(parent):
+            if fn.startswith(STAGING_PREFIX):
+                shutil.rmtree(os.path.join(parent, fn),
+                              ignore_errors=True)
+    backup = out_abs + PRE_MERGE_SUFFIX
+    if not os.path.lexists(backup):
+        return None
+    if not os.path.lexists(out_abs):
+        os.rename(backup, out_abs)      # crash between the two renames
+        return "restored"
+    shutil.rmtree(backup, ignore_errors=True)   # crash before cleanup
+    return "cleaned"
 
 
 def _restrict_tree(frames: List[Frame], parents: np.ndarray, entries: list,

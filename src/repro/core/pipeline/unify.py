@@ -157,7 +157,68 @@ class GlobalTree:
         return local_to_global
 
     def merge_tree(self, other: "GlobalTree") -> np.ndarray:
-        """Merge another tree into this one (reduction-tree step)."""
+        """Merge another tree into this one (reduction-tree step),
+        vectorized.
+
+        Bitwise-identical to ``merge_tree_reference`` (pinned in
+        tests/test_merge_tree_vector.py) by this argument: within one
+        merge the children keys ``(mapped_parent << 32) | fid`` are
+        globally unique (the mapping is injective by induction on
+        depth), so whether a node hits an existing child or misses is
+        independent of visit order, and any child of a missing parent
+        must itself miss — its key's parent id is >= the pre-merge node
+        count, which no existing key contains.  That lets the merge run
+        as three batch phases instead of one dict transaction per node:
+
+        A. classify hit/miss level-by-level (dict lookups only for
+           nodes whose parent hit);
+        B. number the misses ``base + rank`` in gid order — exactly the
+           ids the sequential loop hands out;
+        C. batch-append frames/parents and bulk-update the children
+           index with the final ids.
+        """
+        n = len(other.frames)
+        mapping = np.zeros(n, np.int64)
+        if n <= 1:
+            return mapping
+        parents = np.asarray(other.parents, np.int64)
+        # per-node global frame ids (index 0 unused: the roots align)
+        fids = np.zeros(n, np.int64)
+        frames = other.frames
+        intern = self.intern_frame
+        for gid in range(1, n):
+            fids[gid] = intern(frames[gid])
+        children = self._children
+        depth = tree_depths(parents)
+        is_miss = np.zeros(n, bool)
+        for lvl in range(1, int(depth.max()) + 1):
+            idx = np.nonzero(depth == lvl)[0]
+            par_miss = is_miss[parents[idx]]
+            is_miss[idx[par_miss]] = True       # miss parent -> miss child
+            cand = idx[~par_miss]
+            keys = ((mapping[parents[cand]] << 32) | fids[cand]).tolist()
+            got = np.fromiter((children.get(k, -1) for k in keys),
+                              np.int64, len(cand))
+            hit = got >= 0
+            mapping[cand[hit]] = got[hit]
+            is_miss[cand[~hit]] = True
+        miss = np.nonzero(is_miss)[0]           # gid order == visit order
+        if len(miss):
+            base = len(self.frames)
+            mapping[miss] = base + np.arange(len(miss))
+            new_parents = mapping[parents[miss]]
+            fof = self._frame_of_fid
+            self.frames.extend(fof[int(f)] for f in fids[miss])
+            self.parents.extend(new_parents.tolist())
+            children.update(zip(
+                ((new_parents << 32) | fids[miss]).tolist(),
+                mapping[miss].tolist()))
+        return mapping
+
+    def merge_tree_reference(self, other: "GlobalTree") -> np.ndarray:
+        """The sequential merge loop ``merge_tree`` vectorizes; kept as
+        the equivalence oracle (tests assert bitwise-equal trees and
+        mappings between the two on randomized inputs)."""
         mapping = np.zeros(len(other.frames), np.int64)
         m = mapping.tolist()
         other_parents = other.parents

@@ -24,8 +24,10 @@ Policy semantics (composable; applied dedup -> window -> last -> max):
 - ``keep_last_epochs=N`` — keep only the N newest distinct epochs.
 - ``max_profiles=M``   — compaction cap: retire whole oldest epochs
   until <= M profiles remain; if a single epoch still exceeds M, drop
-  canonically-first profiles (their trace lines are retained — trace
-  retention is epoch-granular).
+  canonically-first profiles **and their trace lines** (sub-epoch trace
+  compaction: a line is dropped iff its identity belonged to a dropped
+  profile and no surviving profile shares it; lines whose identity
+  matches no profile at all are conservatively kept).
 
 Profiles without a ``tag`` are not epoch-scoped: the epoch policies
 (``since_epoch`` / ``keep_last_epochs``) always keep them.
@@ -200,8 +202,20 @@ def apply_retention(entries: Sequence[tuple], trace_lines: Sequence,
                 retire_epochs({alive[0]})
             else:
                 # one (or no) epoch left: cap by dropping canonically-
-                # first profiles; trace retention stays epoch-granular
+                # first profiles, and compact their trace lines too —
+                # a line goes iff its identity belonged to a dropped
+                # profile and no survivor shares it (lines matching no
+                # profile at all are conservatively kept)
+                dropped = items[:len(items) - policy.max_profiles]
                 items = items[len(items) - policy.max_profiles:]
+                kept_ids = {json.dumps(e[0], sort_keys=True)
+                            for e in items}
+                orphaned = {json.dumps(e[0], sort_keys=True)
+                            for e in dropped} - kept_ids
+                if orphaned:
+                    lines = [td for td in lines
+                             if json.dumps(td.identity, sort_keys=True)
+                             not in orphaned]
                 break
 
     report.kept_profiles = len(items)

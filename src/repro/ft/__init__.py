@@ -1,2 +1,4 @@
 from repro.ft.watchdog import (ElasticPlan, RestartPolicy, StragglerWatchdog,  # noqa: F401
                                plan_elastic_mesh)
+from repro.ft.inject import (InjectedCrash, arm_from_env, fault_point,  # noqa: F401
+                             injected, register_points, registered_points)

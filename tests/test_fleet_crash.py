@@ -1,0 +1,295 @@
+"""The fleet crash matrix (ISSUE 6): kill the daemon or the client at
+**every labeled fault point**, restart, redeliver — and the database
+must come out byte-identical to a one-shot ``aggregate()`` over the
+union of acknowledged shards, with the on-disk database intact-or-
+previous at every intermediate instant.
+
+Three layers:
+
+- deterministic matrix sweeps over ``DAEMON_FAULT_POINTS`` and
+  ``CLIENT_FAULT_POINTS`` (in-process ``InjectedCrash``);
+- a hypothesis property over random interleavings of deliveries,
+  duplicates, crashes, and restarts;
+- a subprocess soak (the CI chaos job: ``REPRO_FAULT_POINTS=all``)
+  where the daemon CLI genuinely dies with ``os._exit`` and is
+  relaunched.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.aggregate import aggregate
+from repro.fleet import (DirectoryTransport, FleetDaemon, Journal,
+                         ShardProducer)
+from repro.fleet.client import CLIENT_FAULT_POINTS
+from repro.fleet.daemon import DAEMON_FAULT_POINTS
+from repro.ft import inject
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from test_fleet import build_fleet_inputs, build_shard, synth_shard_inputs
+from test_merge import DB_FILES, assert_db_identical, db_bytes
+
+
+# the chaos job's sweep-widening spec, captured at import: the autouse
+# scrub below removes the variables from the environment so CLI
+# subprocesses and in-process arm_from_env() calls never self-arm
+_CHAOS_SPEC = os.environ.get(inject.ENV_POINTS, "")
+
+
+@pytest.fixture(autouse=True)
+def _scrub_inject_env(monkeypatch):
+    monkeypatch.delenv(inject.ENV_POINTS, raising=False)
+    monkeypatch.delenv(inject.ENV_MODE, raising=False)
+    yield
+    inject.clear()
+
+
+def restart_daemon(tmp_path, **kw):
+    """A fresh FleetDaemon over the same on-disk state — the restart
+    path (the daemon holds no state that is not derivable from disk)."""
+    return FleetDaemon(str(tmp_path / "fleet"), str(tmp_path / "spool"),
+                       n_workers=1, **kw)
+
+
+def restart_producer(tmp_path, daemon):
+    return ShardProducer(str(tmp_path / "outbox"),
+                         DirectoryTransport(daemon.incoming_dir),
+                         producer="hostA", sleep=lambda s: None)
+
+
+def db_intact(db_dir):
+    """The database loads coherently (or does not exist yet) — the
+    intact-or-previous guarantee, checked *at the instant of death*."""
+    if not os.path.exists(os.path.join(db_dir, "meta.json")):
+        return True
+    from repro.core.merge import LoadedShard
+    LoadedShard(db_dir)                      # raises on a torn database
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Registry sanity: the matrix really covers every labeled point
+# ---------------------------------------------------------------------------
+def test_fault_point_registry_covers_the_matrix():
+    registered = set(inject.registered_points())
+    assert set(DAEMON_FAULT_POINTS) <= registered
+    assert set(CLIENT_FAULT_POINTS) <= registered
+    # nothing registered escapes both sweeps
+    assert registered == set(DAEMON_FAULT_POINTS) | set(CLIENT_FAULT_POINTS)
+
+
+def test_inject_spec_parsing_and_env():
+    assert inject.parse_spec("a,b:3") == {"a": 1, "b": 3}
+    assert inject.parse_spec(" a , b:2 ,") == {"a": 1, "b": 2}
+    with pytest.raises(ValueError, match=">= 1"):
+        inject.parse_spec("a:0")
+    plan = inject.parse_spec("all")
+    assert plan == {lb: 1 for lb in inject.registered_points()}
+    assert not inject.arm_from_env({})
+    assert inject.arm_from_env({inject.ENV_POINTS: "x.y:2"})
+    assert inject.armed() == {"x.y": 2}
+    inject.clear()
+    with pytest.raises(ValueError, match="raise|exit"):
+        inject.arm("a", mode="bogus")
+
+
+def test_fault_point_counts_down_and_is_uncatchable():
+    inject.arm("p:2")
+    inject.fault_point("p")                  # first hit: count down
+    with pytest.raises(inject.InjectedCrash):
+        inject.fault_point("p")
+    inject.clear()
+    with inject.injected("q"):
+        with pytest.raises(BaseException) as ei:
+            try:
+                inject.fault_point("q")
+            except Exception:                # quarantine-style handler...
+                pytest.fail("InjectedCrash must not be catchable "
+                            "as Exception")
+        assert ei.value.label == "q"
+    inject.fault_point("q")                  # disarmed: no-op
+
+
+# ---------------------------------------------------------------------------
+# Daemon crash matrix
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("point", DAEMON_FAULT_POINTS)
+def test_daemon_crash_matrix(tmp_path, point):
+    shard_dbs, ref = build_fleet_inputs(tmp_path, n_shards=2)
+    # late shard delivered after the fleet db already exists
+    late_db, late_paths, late_traces = build_shard(tmp_path, 7)
+    daemon = restart_daemon(tmp_path)
+    producer = restart_producer(tmp_path, daemon)
+    for db in shard_dbs:
+        producer.stage(db)
+    producer.deliver()
+    daemon.poll_once()
+
+    producer.stage(late_db)
+    producer.deliver()
+    with inject.injected(point):
+        with pytest.raises(inject.InjectedCrash):
+            daemon.poll_once()
+    assert db_intact(daemon.db_dir)          # intact-or-previous, now
+
+    daemon2 = restart_daemon(tmp_path)       # restart + replay
+    daemon2.poll_once()
+    want = str(tmp_path / "want_all")
+    paths, traces = [], []
+    for i in range(2):
+        p, t = synth_shard_inputs(tmp_path / f"w{i}", 100 + i, 10 * i)
+        paths += p
+        traces += t
+    aggregate(paths + late_paths, want, trace_paths=traces + late_traces)
+    assert_db_identical(daemon2.db_dir, want)
+    journal = Journal.load(daemon2.db_dir)
+    assert len(journal.applied) == 3
+    # a second restart poll is a pure no-op
+    before = db_bytes(daemon2.db_dir)
+    restart_daemon(tmp_path).poll_once()
+    assert db_bytes(str(tmp_path / "fleet")) == before
+
+
+@pytest.mark.parametrize("point", DAEMON_FAULT_POINTS)
+def test_daemon_crash_then_duplicate_redelivery(tmp_path, point):
+    """Crash + the producer re-sending everything it ever staged must
+    not double-fold anything."""
+    shard_dbs, ref = build_fleet_inputs(tmp_path, n_shards=2)
+    daemon = restart_daemon(tmp_path)
+    producer = restart_producer(tmp_path, daemon)
+    producer.stage(shard_dbs[0])             # first fold lands cleanly,
+    producer.deliver()                       # so every point (incl. the
+    daemon.poll_once()                       # swap) is reachable below
+    producer.stage(shard_dbs[1])
+    producer.deliver()
+    with inject.injected(point):
+        with pytest.raises(inject.InjectedCrash):
+            daemon.poll_once()
+    # paranoid producer: restage + redeliver the full history
+    producer2 = restart_producer(tmp_path, daemon)
+    for db in shard_dbs:
+        producer2.stage(db)
+    producer2.deliver()
+    daemon2 = restart_daemon(tmp_path)
+    daemon2.poll_once()
+    daemon2.poll_once()
+    assert_db_identical(daemon2.db_dir, ref)
+    assert len(Journal.load(daemon2.db_dir).applied) == 2
+
+
+# ---------------------------------------------------------------------------
+# Client crash matrix
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("point", CLIENT_FAULT_POINTS)
+def test_client_crash_matrix(tmp_path, point):
+    shard_dbs, ref = build_fleet_inputs(tmp_path, n_shards=2)
+    daemon = restart_daemon(tmp_path)
+    producer = restart_producer(tmp_path, daemon)
+    with inject.injected(point):
+        with pytest.raises(inject.InjectedCrash):
+            for db in shard_dbs:
+                producer.stage(db)
+            producer.deliver()
+    # client restart: sweep temps, restage everything, redeliver
+    producer2 = restart_producer(tmp_path, daemon)
+    for db in shard_dbs:
+        producer2.stage(db)
+    rep = producer2.deliver()
+    assert not rep.failed
+    daemon.poll_once()
+    assert_db_identical(daemon.db_dir, ref)
+    assert len(Journal.load(daemon.db_dir).applied) == 2
+    # no temp droppings survive in outbox or incoming
+    leftovers = [fn for d in (producer2.outbox_dir, daemon.incoming_dir)
+                 for fn in os.listdir(d) if fn.startswith(".tmp-")]
+    assert leftovers == []
+
+
+# ---------------------------------------------------------------------------
+# Property: any interleaving == one-shot aggregation
+# ---------------------------------------------------------------------------
+N_SHARDS = 2
+OPS = (["poll"]
+       + [("deliver", i) for i in range(N_SHARDS)]
+       + [("crash", p) for p in DAEMON_FAULT_POINTS])
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.lists(st.sampled_from(OPS), min_size=1, max_size=8))
+def test_random_interleavings_converge_to_one_shot(tmp_path_factory,
+                                                   schedule):
+    tmp_path = tmp_path_factory.mktemp("interleave")
+    shard_dbs, ref = build_fleet_inputs(tmp_path, n_shards=N_SHARDS)
+    daemon = restart_daemon(tmp_path)
+    producer = restart_producer(tmp_path, daemon)
+    for op in schedule:
+        if op == "poll":
+            daemon.poll_once()
+        elif op[0] == "deliver":             # includes re-deliveries
+            producer.stage(shard_dbs[op[1]])
+            producer.deliver()
+        else:
+            with inject.injected(op[1]):
+                try:
+                    daemon.poll_once()
+                except inject.InjectedCrash:
+                    pass
+            daemon = restart_daemon(tmp_path)
+            producer = restart_producer(tmp_path, daemon)
+    # quiesce: deliver everything once more, then a clean poll
+    for db in shard_dbs:
+        producer.stage(db)
+    producer.deliver()
+    daemon = restart_daemon(tmp_path)
+    daemon.poll_once()
+    assert_db_identical(daemon.db_dir, ref)
+    assert len(Journal.load(daemon.db_dir).applied) == N_SHARDS
+
+
+# ---------------------------------------------------------------------------
+# Subprocess soak: genuine process death (the CI chaos job)
+# ---------------------------------------------------------------------------
+def _run_fleet_cli(args, env_extra=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
+    env.update(env_extra or {})
+    return subprocess.run(
+        [sys.executable, "-m", "repro.fleet", *args],
+        capture_output=True, text=True, env=env, timeout=180)
+
+
+def test_soak_daemon_process_death_at_every_point(tmp_path):
+    """Relaunch loop over real ``os._exit`` deaths.  Locally sweeps a
+    fast subset; the CI chaos job sets ``REPRO_FAULT_POINTS=all`` to
+    sweep every registered daemon point."""
+    points = list(DAEMON_FAULT_POINTS) if _CHAOS_SPEC == inject.ALL else [
+        "daemon.admit.post_unpack", "merge.commit.mid_swap",
+        "daemon.fold.post_commit"]
+    shard_dbs, ref = build_fleet_inputs(tmp_path, n_shards=2)
+    db = str(tmp_path / "fleet")
+    spool = str(tmp_path / "spool")
+    incoming = os.path.join(spool, "incoming")
+    os.makedirs(incoming, exist_ok=True)
+    send = _run_fleet_cli(["send", *shard_dbs,
+                           "--outbox", str(tmp_path / "outbox"),
+                           "--to", incoming])
+    assert send.returncode == 0, send.stderr
+    daemon_args = ["daemon", db, "--spool", spool, "--interval", "0",
+                   "--max-polls", "1", "--workers", "1"]
+    for point in points:
+        r = _run_fleet_cli(daemon_args, {
+            inject.ENV_POINTS: point, inject.ENV_MODE: "exit"})
+        # the point may sit on an already-completed path (e.g. admit
+        # points after everything was admitted): death or clean exit
+        assert r.returncode in (inject.EXIT_CODE, 0), \
+            (point, r.returncode, r.stderr)
+        if r.returncode == inject.EXIT_CODE:
+            assert f"os._exit({inject.EXIT_CODE})" in r.stderr
+    final = _run_fleet_cli(daemon_args)
+    assert final.returncode == 0, final.stderr
+    assert_db_identical(db, ref)
+    assert len(Journal.load(db).applied) == 2

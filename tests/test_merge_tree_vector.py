@@ -1,0 +1,86 @@
+"""Vectorized ``GlobalTree.merge_tree`` vs the sequential reference
+loop (ISSUE 6 satellite): the two must produce **bitwise-equal trees**
+— same frames, same parents, same children index, same mapping — on
+any input, because the merge contract (and the canonical-database
+bytes downstream) is defined by the reference semantics.
+"""
+import numpy as np
+
+from repro.core.cct import Frame, HOST, PLACEHOLDER
+from repro.core.pipeline.unify import GlobalTree
+
+
+def random_tree(rng, n_nodes, n_keys=12):
+    """A GlobalTree grown by random child insertions from a small frame
+    pool (collisions force shared prefixes across trees)."""
+    t = GlobalTree()
+    ids = [0]
+    for _ in range(n_nodes):
+        parent = ids[int(rng.integers(len(ids)))]
+        kind = HOST if rng.integers(2) else PLACEHOLDER
+        f = Frame(kind, f"fn{rng.integers(n_keys)}",
+                  f"mod{rng.integers(3)}", int(rng.integers(5)))
+        ids.append(t.child(parent, f))
+    return t
+
+
+def clone_tree(src):
+    """An independent GlobalTree with identical contents (fresh dicts,
+    fresh lists) — so reference and vectorized merges cannot share
+    state."""
+    dst = GlobalTree()
+    mapping = dst.merge_tree_reference(src)
+    assert mapping.tolist() == list(range(len(src.frames)))
+    return dst
+
+
+def assert_trees_bitwise_equal(a, b):
+    assert a.frames == b.frames
+    assert list(a.parents) == list(b.parents)
+    assert a._children == b._children
+
+
+def test_vectorized_merge_tree_matches_reference_randomized():
+    rng = np.random.default_rng(1234)
+    for trial in range(25):
+        base = random_tree(rng, int(rng.integers(1, 80)))
+        other = random_tree(rng, int(rng.integers(1, 80)))
+        ref, vec = clone_tree(base), clone_tree(base)
+        m_ref = ref.merge_tree_reference(other)
+        m_vec = vec.merge_tree(other)
+        np.testing.assert_array_equal(m_ref, m_vec)
+        assert_trees_bitwise_equal(ref, vec)
+
+
+def test_vectorized_merge_chain_matches_reference():
+    """A reduction over several trees (the unify fold shape): state must
+    stay bitwise identical at every step, not just after one merge."""
+    rng = np.random.default_rng(7)
+    trees = [random_tree(rng, int(rng.integers(5, 60))) for _ in range(6)]
+    ref, vec = clone_tree(trees[0]), clone_tree(trees[0])
+    for t in trees[1:]:
+        m_ref = ref.merge_tree_reference(t)
+        m_vec = vec.merge_tree(t)
+        np.testing.assert_array_equal(m_ref, m_vec)
+        assert_trees_bitwise_equal(ref, vec)
+
+
+def test_merge_tree_trivial_and_disjoint_cases():
+    empty = GlobalTree()
+    assert GlobalTree().merge_tree(empty).tolist() == [0]
+
+    a, b = GlobalTree(), GlobalTree()
+    ia = a.child(0, Frame(HOST, "left", "a.py", 1))
+    b.child(0, Frame(HOST, "right", "b.py", 2))
+    m = a.merge_tree(b)
+    assert m.tolist() == [0, 2]           # appended after a's nodes
+    assert len(a.frames) == 3
+    # idempotent: merging b again is all hits
+    assert a.merge_tree(b).tolist() == [0, 2]
+    assert len(a.frames) == 3
+
+    # a duck-typed shard-like object (frames list + parents ndarray)
+    class Duck:
+        frames = list(b.frames)
+        parents = np.asarray(b.parents, np.int64)
+    assert a.merge_tree(Duck()).tolist() == [0, 2]

@@ -142,10 +142,32 @@ def test_max_profiles_caps_within_single_epoch(tmp_path):
     out = str(tmp_path / "capped")
     db = merge_databases([merged], out,
                          retention=RetentionPolicy(max_profiles=2))
-    # canonically-first (lowest rank) profiles drop; traces stay
-    # (epoch-granular trace retention, documented)
+    # canonically-first (lowest rank) profiles drop, and their trace
+    # lines go with them (sub-epoch trace compaction): the capped
+    # database is byte-identical to re-aggregating the survivors
     assert len(db.profile_ids) == 2
     assert {v["rank"] for v in db.profile_ids.values()} == {2, 3}
+    assert_db_identical(out, expect_db(tmp_path, "want", paths[2:]))
+
+
+def test_single_epoch_cap_keeps_unmatched_trace_lines(tmp_path):
+    """A trace line whose identity matches no profile (a trace-only
+    stream) survives the sub-epoch cap — compaction only drops lines
+    orphaned by a dropped profile."""
+    from repro.core.merge import TraceData
+    paths = write_epoch(tmp_path, 1, n_ranks=3)
+    entries, _, _ = _entries_of(tmp_path, paths)
+    lines = [TraceData(dict(e[0]), np.array([0]), np.array([10]),
+                       np.array([1])) for e in entries]
+    lines.append(TraceData({"stream": "gpu0"}, np.array([0]),
+                           np.array([10]), np.array([1])))
+    items, kept, rep = apply_retention(entries, lines,
+                                       RetentionPolicy(max_profiles=1))
+    assert len(items) == 1
+    kept_ids = [td.identity for td in kept]
+    assert {"stream": "gpu0"} in kept_ids          # unmatched: kept
+    assert items[0][0] in kept_ids                 # survivor's line: kept
+    assert len(kept) == 2 and rep.dropped_lines == 2
 
 
 def test_untagged_profiles_survive_epoch_policies(tmp_path):
