@@ -1,10 +1,23 @@
 """Measurement overhead (paper §8.1, Table: 1.85x-2.24x for nvprof/
-HPCToolkit-class tools).
+HPCToolkit-class tools) — paired-repeat ratios + the governed budget.
 
-Runs the same reduced training loop bare, with coarse profiling (dispatch
-timing only), and with fine-grained profiling (PC-sample analogue +
-tracing), and reports the overhead ratios.  The paper's comparable numbers:
-2.24x (PeleC, PC sampling), 1.85x (Nyx trace, 128 ranks).
+Four modes of the same reduced training loop, run back-to-back inside
+each repeat so the ratios are paired (CI wall-clock swings +-30%; a
+paired ratio cancels most of it, same policy as bench_pipeline):
+
+- **bare**     — no measurement;
+- **coarse**   — dispatch timing only (sample_rate_hz=0);
+- **fine**     — full fidelity: PC-sample analogue + tracing, the
+  paper's comparable 1.85x-2.24x configuration;
+- **governed** — fine-grained start, but an ``OverheadGovernor``
+  throttles fidelity to ``budget`` (ISSUE 7).  The budget gate is the
+  profiler's *own* steady-state accounting (tool ns / app ns over the
+  second half of the loop), not the wall ratio — that is the quantity
+  the governor controls, and it is stable on a noisy 2-core runner.
+
+Reported ratios are the best paired ratio over ``repeats``.
+``governed_under_budget`` rides the benchmark-budget contract
+(benchmarks.run fails the sweep when it is False).
 """
 from __future__ import annotations
 
@@ -14,13 +27,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.configs.base import ShapeConfig
 from repro.launch import steps as steps_mod
 from repro.models import transformer as T
 from repro.optim import adamw
 
 
-def _loop(n_steps, params, opt_state, batch, jit_step, prof=None, mid=None):
+def _loop(n_steps, params, opt_state, batch, jit_step, prof=None, mid=None,
+          governor=None):
     t0 = time.perf_counter()
     for _ in range(n_steps):
         if prof is not None:
@@ -28,6 +41,8 @@ def _loop(n_steps, params, opt_state, batch, jit_step, prof=None, mid=None):
                                module_id=mid):
                 params, opt_state, m = jit_step(params, opt_state, batch)
                 jax.block_until_ready(m["loss"])
+            if governor is not None:
+                governor.observe()
         else:
             params, opt_state, m = jit_step(params, opt_state, batch)
             jax.block_until_ready(m["loss"])
@@ -35,7 +50,16 @@ def _loop(n_steps, params, opt_state, batch, jit_step, prof=None, mid=None):
 
 
 def run(n_steps: int = 30, out_dir: str = "/tmp/repro_bench_overhead",
-        batch_shape=(4, 128)):
+        batch_shape=(4, 128), repeats: int = 3, budget: float = 0.25):
+    # budget calibration (same rationale as bench_serving): the dispatch
+    # path has a fixed per-dispatch cost the fidelity ladder cannot
+    # remove, and reduced-config CPU steps are short enough that the
+    # floor sits near 10-16%.  0.25 keeps ~1.6x headroom over the
+    # observed steady state so the gate catches dispatch-path cost
+    # regressions without tripping on scheduler noise.
+    from repro.core.profiler import Profiler
+    from repro.serving.governor import GovernorConfig, OverheadGovernor
+
     cfg = get_config("qwen2-1.5b").reduced()
     opts = T.ModelOptions(q_chunk=32, kv_chunk=32, loss_chunk=32)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
@@ -46,33 +70,67 @@ def run(n_steps: int = 30, out_dir: str = "/tmp/repro_bench_overhead",
     jit_step = jax.jit(steps_mod.make_train_step(cfg, None, opts,
                                                  adamw.OptConfig()))
     # warmup/compile
-    p, o, _ = jit_step(params, opt_state, batch)
+    jit_step(params, opt_state, batch)
     hlo = jit_step.lower(params, opt_state, batch).compile().as_text()
 
-    t_bare = _loop(n_steps, params, opt_state, batch, jit_step)
+    best = {"bare_s": float("inf"), "coarse_s": float("inf"),
+            "fine_s": float("inf"), "governed_s": float("inf")}
+    ratios = {"coarse": [], "fine": [], "governed": []}
+    governed_frac = []
+    final_level = 0
+    for rep in range(max(1, repeats)):
+        t_bare = _loop(n_steps, params, opt_state, batch, jit_step)
 
-    from repro.core.profiler import Profiler
-    prof = Profiler(out_dir + "/coarse", tracing=True, rng_seed=0,
-                    sample_rate_hz=0)          # no samples: coarse only
-    with prof:
-        t_coarse = _loop(n_steps, params, opt_state, batch, jit_step,
-                         prof, None)
-    prof.write()
+        prof = Profiler(f"{out_dir}/coarse{rep}", tracing=True, rng_seed=0,
+                        sample_rate_hz=0)      # no samples: coarse only
+        with prof:
+            t_coarse = _loop(n_steps, params, opt_state, batch, jit_step,
+                             prof, None)
 
-    prof2 = Profiler(out_dir + "/fine", tracing=True, rng_seed=0,
-                     sample_rate_hz=1e6)
-    mid = prof2.register_module("train_step", hlo)
-    with prof2:
-        t_fine = _loop(n_steps, params, opt_state, batch, jit_step,
-                       prof2, mid)
-    prof2.write()
+        prof2 = Profiler(f"{out_dir}/fine{rep}", tracing=True, rng_seed=0,
+                         sample_rate_hz=1e6)
+        mid = prof2.register_module("train_step", hlo)
+        with prof2:
+            t_fine = _loop(n_steps, params, opt_state, batch, jit_step,
+                           prof2, mid)
 
+        prof3 = Profiler(f"{out_dir}/governed{rep}", tracing=True,
+                         rng_seed=0, sample_rate_hz=1e6)
+        mid3 = prof3.register_module("train_step", hlo)
+        gov = OverheadGovernor(prof3, GovernorConfig(
+            budget=budget, interval=max(2, n_steps // 8)))
+        with prof3:
+            half = max(1, n_steps // 2)
+            t_g0 = _loop(half, params, opt_state, batch, jit_step,
+                         prof3, mid3, gov)
+            mid_counters = dict(prof3.overhead_counters())
+            t_g1 = _loop(n_steps - half, params, opt_state, batch,
+                         jit_step, prof3, mid3, gov)
+        t_governed = t_g0 + t_g1
+        end = prof3.overhead_counters()
+        tool = end["tool_ns"] - mid_counters["tool_ns"]
+        app = end["app_ns"] - mid_counters["app_ns"]
+        governed_frac.append(tool / max(app, 1))
+        final_level = gov.level
+
+        best["bare_s"] = min(best["bare_s"], t_bare)
+        best["coarse_s"] = min(best["coarse_s"], t_coarse)
+        best["fine_s"] = min(best["fine_s"], t_fine)
+        best["governed_s"] = min(best["governed_s"], t_governed)
+        ratios["coarse"].append(t_coarse / t_bare)
+        ratios["fine"].append(t_fine / t_bare)
+        ratios["governed"].append(t_governed / t_bare)
+
+    frac = min(governed_frac)
     return {
-        "bare_s": t_bare,
-        "coarse_s": t_coarse,
-        "fine_s": t_fine,
-        "coarse_overhead_x": t_coarse / t_bare,
-        "fine_overhead_x": t_fine / t_bare,
+        **best,
+        "coarse_overhead_x": min(ratios["coarse"]),
+        "fine_overhead_x": min(ratios["fine"]),
+        "governed_overhead_x": min(ratios["governed"]),
+        "governed_measured_frac": frac,
+        "governed_budget_frac": budget,
+        "governed_under_budget": frac <= budget,
+        "governor_final_level": final_level,
         "paper_claim_x": "1.85-2.24",
     }
 
@@ -82,13 +140,13 @@ def main(small: bool = False):
     # overhead amortizes with kernel duration (the paper's kernels are much
     # longer than a reduced-config CPU step): report two step sizes
     # (--small keeps only the quick config with fewer steps: CI smoke)
-    configs = (("small", (4, 128), 10),) if small else \
-        (("small", (4, 128), 30), ("large", (8, 512), 8))
-    for label, shape, steps in configs:
-        r = run(n_steps=steps, batch_shape=shape)
+    configs = (("small", (4, 128), 10, 2),) if small else \
+        (("small", (4, 128), 30, 3), ("large", (8, 512), 8, 2))
+    for label, shape, steps, reps in configs:
+        r = run(n_steps=steps, batch_shape=shape, repeats=reps)
         for k, v in r.items():
             print(f"bench_overhead,{label}_{k},{v}")
-        out[label] = r
+            out[f"{label}_{k}"] = v
     return out
 
 

@@ -1,0 +1,219 @@
+"""Always-on serving profiler (ISSUE 7): cost of the full serving
+stack on a synthetic, jax-free load — TRACKED as BENCH_serving.json.
+
+The load is a busy-wait "model" (handcrafted HLO module, so PC-sample
+attribution has real ops to land on) served request-by-request:
+prefill + ``gen_len`` decode steps per request, through a
+``ServingProfiler`` with per-request windows and the overhead governor.
+
+Stages (paired-repeat ratios, same policy as bench_pipeline):
+
+- ``serve_bare_s`` / ``serve_governed_s`` — the loop without any
+  measurement vs through the governed serving profiler;
+  ``governed_overhead_x`` is the best paired ratio.
+- ``governed_measured_frac`` — the profiler's own steady-state
+  dispatch-path accounting (tool ns / app ns, second half of the run);
+  gated against ``governed_budget_frac`` via ``governed_under_budget``
+  (benchmarks.run fails the sweep on False).
+- ``attribution_s`` — aggregate the governed run (profiles + traces)
+  and answer the tentpole question: per-request GPU attribution and
+  phase latency percentiles out of the database.
+- ``telemetry_s`` — export ``epochs`` snapshots as epoch-tagged shards
+  through a ShardProducer into a FleetDaemon and read the series back
+  (exactly-once: row count must equal the epoch count).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import time
+
+PREFILL_NS = 2_000_000
+DECODE_NS = 1_000_000
+# The dispatch path has a fixed cost (~0.1-0.2ms: channel round-trip,
+# trace append, context insert) that the fidelity ladder cannot remove
+# — against the 1-2ms synthetic kernels here that is ~10-15% floor
+# overhead, where production GPU kernels (10-100x longer) would see
+# ~1%.  The gate budget is set with ~1.8x headroom over the expected
+# steady state so it catches dispatch-path cost regressions, not
+# scheduler noise; BUDGET_DEMO is deliberately unreachable so the
+# controller demonstrably walks the whole ladder to the floor.
+BUDGET = 0.25
+BUDGET_DEMO = 0.02
+
+# regex-parseable HLO (repro.core.structure.parse_hlo) so PC samples
+# attribute to ops without touching jax
+SYNTH_HLO = """ENTRY %serve (p0: f32[256,256]) -> f32[256,256] {
+  %p0 = f32[256,256] parameter(0)
+  %dot.1 = f32[256,256] dot(%p0, %p0)
+  %add.2 = f32[256,256] add(%dot.1, %p0)
+  %dot.3 = f32[256,256] dot(%add.2, %p0)
+  %mul.4 = f32[256,256] multiply(%dot.3, %add.2)
+  %dot.5 = f32[256,256] dot(%mul.4, %p0)
+  %exp.6 = f32[256,256] exponential(%dot.5)
+  %dot.7 = f32[256,256] dot(%exp.6, %p0)
+  ROOT %tanh.8 = f32[256,256] tanh(%dot.7)
+}
+"""
+
+
+def _spin(ns: int) -> None:
+    end = time.perf_counter_ns() + ns
+    while time.perf_counter_ns() < end:
+        pass
+
+
+def _serve_loop(n_requests: int, gen_len: int, sp=None, mid=None,
+                first_id: int = 0) -> float:
+    from repro.serving.window import DECODE, PREFILL
+    t0 = time.perf_counter()
+    for i in range(first_id, first_id + n_requests):
+        if sp is None:
+            _spin(PREFILL_NS)
+            for _ in range(gen_len):
+                _spin(DECODE_NS)
+            continue
+        with sp.request(f"r{i}", PREFILL, tokens=32):
+            with sp.profiler.dispatch("kernel", "prefill", stream=0,
+                                      module_id=mid):
+                _spin(PREFILL_NS)
+        for _ in range(gen_len):
+            with sp.request(f"r{i}", DECODE, tokens=1):
+                with sp.profiler.dispatch("kernel", "decode_step",
+                                          stream=0, module_id=mid):
+                    _spin(DECODE_NS)
+    return time.perf_counter() - t0
+
+
+def run(n_requests: int = 24, gen_len: int = 8, repeats: int = 3,
+        epochs: int = 6, out_dir: str = "/tmp/repro_bench_serving"):
+    from repro.core.aggregate import aggregate
+    from repro.fleet.client import DirectoryTransport, ShardProducer
+    from repro.fleet.daemon import FleetDaemon
+    from repro.serving.governor import GovernorConfig
+    from repro.serving.live import ServingProfiler
+    from repro.serving.telemetry import TelemetryExporter, read_telemetry
+    from repro.traceview.stats import (request_attribution,
+                                       request_latency_percentiles)
+    from repro.traceview.tracedb import TraceDB
+
+    shutil.rmtree(out_dir, ignore_errors=True)
+    os.makedirs(out_dir, exist_ok=True)
+    best = {"serve_bare_s": float("inf"),
+            "serve_governed_s": float("inf")}
+    ratios = []
+    fracs = []
+    final = {}
+    paths = None
+    for rep in range(max(1, repeats)):
+        t_bare = _serve_loop(2 * n_requests, gen_len)
+        sp = ServingProfiler(
+            os.path.join(out_dir, f"prof{rep}"),
+            governor=GovernorConfig(budget=BUDGET, interval=8,
+                                    patience=5),
+            sample_rate_hz=1e6)
+        mid = sp.profiler.register_module("serve_step", SYNTH_HLO)
+        sp.start()
+        # settle phase: the controller starts at full fidelity and needs
+        # a few control windows to walk down the ladder — the
+        # steady-state accounting window opens only after it
+        t_g0 = _serve_loop(n_requests, gen_len, sp, mid)
+        mid_counters = dict(sp.profiler.overhead_counters())
+        t_g1 = _serve_loop(n_requests, gen_len, sp, mid,
+                           first_id=n_requests)
+        t_governed = t_g0 + t_g1
+        end = sp.profiler.overhead_counters()
+        fracs.append((end["tool_ns"] - mid_counters["tool_ns"])
+                     / max(end["app_ns"] - mid_counters["app_ns"], 1))
+        sp.profiler.flush()
+        rep_paths = sp.write()
+        status = sp.status()
+        governor = sp.governor.state()
+        sp.stop()
+        if t_governed < best["serve_governed_s"]:
+            paths = rep_paths
+            final = {"status": status, "governor": governor}
+        best["serve_bare_s"] = min(best["serve_bare_s"], t_bare)
+        best["serve_governed_s"] = min(best["serve_governed_s"],
+                                       t_governed)
+        ratios.append(t_governed / t_bare)
+
+    # -- attribution out of the aggregated database -------------------------
+    t0 = time.perf_counter()
+    profs = [v for k, v in sorted(paths.items()) if "trace" not in k]
+    traces = [v for k, v in sorted(paths.items()) if "trace" in k]
+    db = aggregate(profs, os.path.join(out_dir, "db"), n_ranks=1,
+                   n_threads=1, trace_paths=traces)
+    lines = TraceDB(db.trace_db_path()).line_views()
+    attribution = request_attribution(lines, db)
+    percentiles = request_latency_percentiles(lines, db)
+    attribution_s = time.perf_counter() - t0
+    assert len(attribution) == 2 * n_requests, \
+        f"expected {2 * n_requests} attributed requests, " \
+        f"got {len(attribution)}"
+    assert "prefill" in percentiles and "decode" in percentiles
+
+    # -- telemetry round trip ----------------------------------------------
+    t0 = time.perf_counter()
+    daemon = FleetDaemon(os.path.join(out_dir, "fleet_db"),
+                         os.path.join(out_dir, "spool"))
+    producer = ShardProducer(os.path.join(out_dir, "outbox"),
+                             DirectoryTransport(daemon.incoming_dir),
+                             daemon_spool_soft=64)
+    exporter = TelemetryExporter(producer, host="bench", rank=0)
+    for e in range(epochs):
+        exporter.export(dict(final["status"], tok_s=float(e)))
+    daemon.poll_once()
+    rows = read_telemetry(daemon.database())
+    telemetry_s = time.perf_counter() - t0
+    assert len(rows) == epochs, f"expected {epochs} rows, got {len(rows)}"
+
+    # -- throttle demo: an unreachable budget must walk the controller
+    # all the way down the ladder (convergence itself is pinned in
+    # tests/test_serving.py; this seeds the trajectory numbers)
+    sp_demo = ServingProfiler(
+        os.path.join(out_dir, "prof_demo"),
+        governor=GovernorConfig(budget=BUDGET_DEMO, interval=8),
+        sample_rate_hz=1e6)
+    mid_demo = sp_demo.profiler.register_module("serve_step", SYNTH_HLO)
+    sp_demo.start()
+    _serve_loop(n_requests, gen_len, sp_demo, mid_demo)
+    demo = sp_demo.governor.state()
+    sp_demo.stop()
+
+    frac = min(fracs)
+    st = final["status"]
+    return {
+        **best,
+        "governed_overhead_x": min(ratios),
+        "governed_measured_frac": frac,
+        "governed_budget_frac": BUDGET,
+        "governed_under_budget": frac <= BUDGET,
+        "governor_final_level": final["governor"]["level"],
+        "governor_throttle_downs": final["governor"]["throttle_downs"],
+        "demo_budget_frac": BUDGET_DEMO,
+        "demo_final_level": demo["level"],
+        "demo_throttle_downs": demo["throttle_downs"],
+        "samples_kept": st["samples_kept"],
+        "samples_dropped": st["samples_dropped"],
+        "attribution_s": attribution_s,
+        "attributed_requests": len(attribution),
+        "decode_p50_ms": st["decode_p50_ms"],
+        "prefill_p50_ms": st["prefill_p50_ms"],
+        "telemetry_s": telemetry_s,
+        "telemetry_epochs": len(rows),
+    }
+
+
+def main(small: bool = False):
+    if small:
+        r = run(n_requests=10, gen_len=4, repeats=2, epochs=3)
+    else:
+        r = run()
+    for k, v in r.items():
+        print(f"bench_serving,{k},{v}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

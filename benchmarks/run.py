@@ -19,7 +19,7 @@ import traceback
 from benchmarks import (bench_aggregation, bench_channels, bench_counters,
                         bench_fleet, bench_merge, bench_overhead,
                         bench_pipeline, bench_reconstruction, bench_roofline,
-                        bench_sparse, bench_traceview)
+                        bench_serving, bench_sparse, bench_traceview)
 
 ALL = {
     "channels": bench_channels,        # §4.1 wait-free channels
@@ -33,11 +33,12 @@ ALL = {
     "merge": bench_merge,              # ISSUE 4 sharded/incremental merge
     "pipeline": bench_pipeline,        # ISSUE 5 shard-driver scaling
     "fleet": bench_fleet,              # ISSUE 6 daemon ingest + recovery
+    "serving": bench_serving,          # ISSUE 7 always-on serving profiler
 }
 
 # benchmarks whose results are persisted as BENCH_<name>.json
 TRACKED = ("aggregation", "channels", "traceview", "counters", "merge",
-           "pipeline", "fleet")
+           "pipeline", "fleet", "serving")
 
 # --compare: a tracked stage time growing more than this fraction over
 # its committed BENCH_<name>.json baseline fails the sweep

@@ -68,6 +68,25 @@ class Profiler:
         # windows of one rank stay distinct through aggregation,
         # incremental merge, and the trace.db line index
         self.tag = tag
+        # always-on serving knobs (ISSUE 7; repro.serving.governor): the
+        # effective PC-sampling rate is sample_rate_hz * sample_scale,
+        # capped at sample_cap samples per dispatch, and host unwinds
+        # stop at unwind_depth frames (0 = single <app> frame).  All
+        # three are safe to mutate between dispatches, which is how the
+        # overhead governor throttles measurement at run time without
+        # ever turning it off (coarse dispatch timing + tracing stay).
+        self.sample_scale = 1.0
+        self.sample_cap: Optional[int] = None
+        self.unwind_depth = 64
+        # overhead self-accounting: time spent in the dispatch path
+        # itself (entry bookkeeping + exit attribution) vs time in the
+        # application region — the governor's feedback signal
+        self.tool_ns = 0
+        self.app_ns = 0
+        self.n_dispatches = 0
+        self.samples_kept = 0
+        self.samples_dropped = 0
+        self._windows = threading.local()
         self._rng = (np.random.default_rng(rng_seed)
                      if rng_seed is not None else None)
         self._corr = itertools.count(1)
@@ -150,12 +169,47 @@ class Profiler:
         return st
 
     def _host_context(self, st: _ThreadState, name: str) -> CCTNode:
-        if self.unwind:
-            frames = unwind_host_stack(skip=3)
+        if self.unwind and self.unwind_depth > 0:
+            frames = unwind_host_stack(skip=3, max_depth=self.unwind_depth)
         else:
             frames = [Frame("host", "<app>", "", 0)]
         node = st.cct.insert_path(frames)
+        for wf in self._window_frames():
+            node = st.cct.get_or_insert(node, wf)
         return node
+
+    # -- measurement windows (ISSUE 7: per-request serving attribution) --
+    def _window_frames(self) -> list:
+        frames = getattr(self._windows, "frames", None)
+        if frames is None:
+            frames = self._windows.frames = []
+        return frames
+
+    @contextlib.contextmanager
+    def window(self, *frames: Frame):
+        """A measurement window: while open on this thread, ``frames``
+        are spliced between the unwound host stack and every dispatch
+        placeholder / cpu_region, so the aggregated database attributes
+        the enclosed GPU and CPU work to the window (the per-request /
+        per-phase identities of ``repro.serving.window``).  Windows
+        nest; frames ride the CCT the same way ``dispatch_profiles``
+        rides ctx bits — no file-format change."""
+        stack = self._window_frames()
+        n = len(stack)
+        stack.extend(frames)
+        try:
+            yield
+        finally:
+            del stack[n:]
+
+    def overhead_counters(self) -> Dict[str, int]:
+        """Cumulative dispatch-path self-accounting (the governor's
+        input): tool time vs application time, dispatch count, and the
+        PC-sample kept/dropped tally under the current throttle."""
+        return {"tool_ns": self.tool_ns, "app_ns": self.app_ns,
+                "dispatches": self.n_dispatches,
+                "samples_kept": self.samples_kept,
+                "samples_dropped": self.samples_dropped}
 
     @contextlib.contextmanager
     def dispatch(self, kind: str, name: str, *, stream: int = 0,
@@ -166,6 +220,7 @@ class Profiler:
         ``duration_ns`` overrides the measured wall time (used when the
         caller has a better device-side estimate, e.g. from events).
         """
+        te0 = self.clock()
         st = self._state()
         ch = self._channels.channel_for(threading.get_ident())
         ctx = self._host_context(st, name)
@@ -193,7 +248,13 @@ class Profiler:
                     samples = sampling.instruction_counts(mod)
                 else:
                     samples = sampling.pc_samples(
-                        mod, dur * 1e-9, self.sample_rate_hz, self._rng)
+                        mod, dur * 1e-9,
+                        self.sample_rate_hz * self.sample_scale,
+                        self._rng, cap=self.sample_cap)
+                    kept = sum(s.count for s in samples)
+                    base = max(1, int(dur * 1e-9 * self.sample_rate_hz))
+                    self.samples_kept += kept
+                    self.samples_dropped += max(0, base - kept)
                 if self._counters is not None:
                     # the counter reading rides the activity record
                     # through the same SPSC channels (§4.1, §6)
@@ -206,6 +267,10 @@ class Profiler:
                 self._drain_activities(st, ch)
             st.trace.append((t0, t0 + dur, ctx.node_id))
             self._drain_activities(st, ch)
+            te1 = self.clock()
+            self.tool_ns += (t0 - te0) + (te1 - t1)
+            self.app_ns += t1 - t0
+            self.n_dispatches += 1
 
     @contextlib.contextmanager
     def cpu_region(self, name: str):

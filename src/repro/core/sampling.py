@@ -83,31 +83,42 @@ def op_weights(module: HloModule) -> "np.ndarray":
 
 def pc_samples(module: HloModule, duration_s: float,
                rate_hz: float = 1e6, rng: Optional[np.random.Generator] = None,
-               ) -> List[Sample]:
+               cap: Optional[int] = None) -> List[Sample]:
     """Draw PC samples for one kernel execution of ``duration_s``.
 
     Expected total samples = duration * rate; distributed over ops
     proportionally to modeled op time (multinomial when rng given,
-    deterministic expectation rounding otherwise).
+    deterministic expectation rounding otherwise).  ``cap`` bounds the
+    samples drawn for this one execution — the serving governor's
+    per-dispatch throttle (repro.serving.governor); at least one sample
+    is always drawn, so fine-grained attribution never fully stops.
     """
     ops = module.all_ops()
     if not ops:
         return []
     w, stall = op_weights(module)
-    total_w = w.sum()
-    if total_w <= 0:
+    # normalized weights cached with the module: the division is O(ops)
+    # and this runs on the dispatch path
+    p = getattr(module, "_op_p_cache", None)
+    if p is None:
+        total_w = w.sum()
+        p = w / total_w if total_w > 0 else None
+        module._op_p_cache = p
+    if p is None:
         return []
     n = max(1, int(duration_s * rate_hz))
+    if cap is not None:
+        n = max(1, min(n, int(cap)))
     if rng is not None:
-        counts = rng.multinomial(n, w / total_w)
+        counts = rng.multinomial(n, p)
     else:
-        counts = np.floor(n * w / total_w + 0.5).astype(np.int64)
-    out: List[Sample] = []
-    for i, c in enumerate(counts):
-        if c > 0:
-            out.append(Sample(op_index=ops[i].index,
-                              stall=STALL_CLASSES[stall[i]], count=int(c)))
-    return out
+        counts = np.floor(n * p + 0.5).astype(np.int64)
+    # touch only the ops that drew samples: with the governor capping n
+    # far below the op count, the dispatch-path cost must be O(samples),
+    # not O(module ops)
+    return [Sample(op_index=ops[i].index, stall=STALL_CLASSES[stall[i]],
+                   count=int(counts[i]))
+            for i in np.nonzero(counts)[0]]
 
 
 def instruction_counts(module: HloModule,

@@ -145,7 +145,13 @@ class HloModule:
         return out
 
     def loop_depth(self) -> Dict[str, List[HloOp]]:
-        """computation name -> chain of enclosing while-ops (outer first)."""
+        """computation name -> chain of enclosing while-ops (outer first).
+
+        Cached: the call graph is immutable after parse, and op_context
+        runs this on the dispatch path for every fresh PC-sample op."""
+        cached = getattr(self, "_loop_depth_cache", None)
+        if cached is not None:
+            return cached
         callers = self.callers()
         memo: Dict[str, List[HloOp]] = {}
 
@@ -167,6 +173,7 @@ class HloModule:
 
         for c in self.computations:
             chain(c, frozenset())
+        self._loop_depth_cache = memo
         return memo
 
     def op_context(self, op: HloOp) -> List[Frame]:

@@ -86,6 +86,25 @@ class DirectoryTransport:
         except OSError as e:
             raise TransportError(f"directory delivery failed: {e}") from e
 
+    def poll_status(self) -> dict:
+        """Daemon spool depth observed straight from the filesystem
+        (same-box deployments): undelivered incoming envelopes plus the
+        sibling ``pending/`` unpacked shards — the same number
+        ``FleetDaemon.spool_depth()`` reports."""
+        try:
+            incoming = sum(1 for fn in os.listdir(self.incoming_dir)
+                           if fn.endswith(ENVELOPE_SUFFIX))
+            pending_dir = os.path.join(
+                os.path.dirname(os.path.abspath(self.incoming_dir)),
+                "pending")
+            pending = 0
+            if os.path.isdir(pending_dir):
+                pending = sum(1 for fn in os.listdir(pending_dir)
+                              if not fn.startswith("."))
+        except OSError as e:
+            raise TransportError(f"status poll failed: {e}") from e
+        return {"spool_depth": incoming + pending}
+
 
 class SocketTransport:
     """Deliver over the daemon's unix-socket listener (``SocketIngest``):
@@ -111,6 +130,25 @@ class SocketTransport:
         if not reply.startswith("OK"):
             raise TransportError(f"daemon rejected envelope: {reply}")
 
+    def poll_status(self) -> dict:
+        """Status poll over the socket: a zero-length frame, to which
+        ``SocketIngest`` replies ``OK <status json>``."""
+        import json
+        try:
+            with socket.socket(socket.AF_UNIX, socket.SOCK_STREAM) as s:
+                s.settimeout(self.timeout_s)
+                s.connect(self.socket_path)
+                s.sendall(self._LEN.pack(0))
+                reply = s.makefile("rb").readline().decode().strip()
+        except OSError as e:
+            raise TransportError(f"status poll failed: {e}") from e
+        if not reply.startswith("OK "):
+            raise TransportError(f"daemon status poll failed: {reply}")
+        try:
+            return json.loads(reply[3:])
+        except ValueError as e:
+            raise TransportError(f"malformed status reply: {e}") from e
+
 
 @dataclasses.dataclass
 class DeliveryReport:
@@ -130,6 +168,7 @@ class ShardProducer:
     def __init__(self, outbox_dir: str, transport, *,
                  producer: str = "producer",
                  spool_soft: int = 32, spool_max: int = 64,
+                 daemon_spool_soft: Optional[int] = None,
                  policy: Optional[RestartPolicy] = None,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep):
@@ -140,11 +179,14 @@ class ShardProducer:
         self.producer = producer
         self.spool_soft = spool_soft
         self.spool_max = spool_max
+        self.daemon_spool_soft = daemon_spool_soft
         self.policy = policy if policy is not None else RestartPolicy(
             backoff_base_s=0.05, backoff_max_s=2.0)
         self.clock = clock
         self.sleep = sleep
-        self.throttled = False          # outbox above the soft bound
+        self.throttled = False          # outbox or daemon over soft bound
+        self.daemon_spool_depth = 0     # last observed daemon backlog
+        self.daemon_backpressured = False
         self.dropped = 0                # envelopes sacrificed, cumulative
         os.makedirs(self.outbox_dir, exist_ok=True)
         sweep_stale_temps(self.outbox_dir)
@@ -168,21 +210,48 @@ class ShardProducer:
         return [path for _, _, path in ranked]
 
     def stage(self, db_dir: str, *, epoch: int = 0,
-              meta: Optional[dict] = None) -> str:
+              meta: Optional[dict] = None,
+              shard_id: Optional[str] = None) -> str:
         """Package ``db_dir`` into the outbox; returns the shard id.
         Never blocks: over the hard bound, the oldest epoch is dropped
-        (counted, warned) to make room for the measurement just taken."""
+        (counted, warned) to make room for the measurement just taken.
+        ``shard_id`` overrides the content-derived id — telemetry
+        exporters use a deterministic per-epoch id so a re-exported
+        epoch dedups at the daemon instead of double-counting."""
         full_meta = dict(meta or {})
         full_meta["epoch"] = int(epoch)
         sid = pack_envelope(
             db_dir, os.path.join(self.outbox_dir, "{id}" + ENVELOPE_SUFFIX),
-            producer=self.producer, meta=full_meta)
+            shard_id=shard_id, producer=self.producer, meta=full_meta)
         self._enforce_bound()
         return sid
 
+    def poll_backpressure(self) -> bool:
+        """Refresh ``throttled`` from both ends of the pipe: the local
+        outbox depth (soft bound, as before) and — when the transport
+        can observe the daemon and ``daemon_spool_soft`` is set — the
+        daemon's unfolded spool depth.  A failed poll keeps the last
+        observation (polling must never hurt the serving host).  The
+        overhead governor consumes the combined flag
+        (``OverheadGovernor.note_backpressure``)."""
+        poll = getattr(self.transport, "poll_status", None)
+        if poll is not None and self.daemon_spool_soft is not None:
+            try:
+                status = poll()
+                self.daemon_spool_depth = int(
+                    status.get("spool_depth", 0))
+                self.daemon_backpressured = (
+                    self.daemon_spool_depth > self.daemon_spool_soft)
+            except TransportError:
+                pass
+        self.throttled = (len(self.spooled()) > self.spool_soft
+                          or self.daemon_backpressured)
+        return self.throttled
+
     def _enforce_bound(self) -> None:
         spooled = self.spooled()
-        self.throttled = len(spooled) > self.spool_soft
+        self.throttled = (len(spooled) > self.spool_soft
+                          or self.daemon_backpressured)
         overflow = len(spooled) - self.spool_max
         if overflow <= 0:
             return
@@ -224,5 +293,6 @@ class ShardProducer:
                 os.unlink(path)
                 report.delivered.append(name)
                 break
-        self.throttled = len(self.spooled()) > self.spool_soft
+        self.throttled = (len(self.spooled()) > self.spool_soft
+                          or self.daemon_backpressured)
         return report

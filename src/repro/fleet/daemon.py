@@ -262,16 +262,34 @@ class FleetDaemon:
         batch = [sid for sid in self._pending_ids() if sid not in journal]
         if not batch:
             return
-        # metric-taxonomy gate: the database's columns (or, bootstrapping,
-        # the canonically-first non-empty shard's) are the reference;
-        # mismatched shards quarantine rather than poison the fold
+        # metric-taxonomy gate: the database's columns are the reference;
+        # mismatched shards quarantine rather than poison the fold.
+        # Bootstrapping an empty database, the reference is the batch's
+        # MAJORITY taxonomy (ties broken by smallest shard id holding
+        # them) — shard ids are content hashes, so "first id in the
+        # batch" would let an arbitrary outlier win the fleet db
         db = self.database()
         reference = db.metrics if db is not None and db.profile_ids \
             else None
+        shard_metrics = {
+            sid: self._shard_metrics(os.path.join(self.pending_dir, sid))
+            for sid in batch}
+        if reference is None:
+            votes: dict = {}
+            for sid in batch:
+                m = shard_metrics[sid]
+                if m is not None:
+                    votes.setdefault(tuple(m), []).append(sid)
+            if votes:
+                top = max(len(sids) for sids in votes.values())
+                reference = list(min(
+                    (tax for tax, sids in votes.items()
+                     if len(sids) == top),
+                    key=lambda tax: min(votes[tax])))
         kept: List[str] = []
         for sid in batch:
             sdir = os.path.join(self.pending_dir, sid)
-            metrics = self._shard_metrics(sdir)
+            metrics = shard_metrics[sid]
             if metrics is not None and reference is not None \
                     and metrics != reference:
                 self._quarantine(
@@ -279,8 +297,6 @@ class FleetDaemon:
                     f"{len(metrics)} column(s) ({metrics[:3]}...), "
                     f"database has {len(reference)}", report)
                 continue
-            if metrics is not None and reference is None:
-                reference = metrics
             kept.append(sid)
         if not kept:
             return
@@ -337,10 +353,19 @@ class FleetDaemon:
         return polls
 
     # -- status -------------------------------------------------------------
+    def spool_depth(self) -> int:
+        """The backpressure signal: shards delivered but not yet folded
+        (incoming envelopes + pending unpacked shards).  Producers poll
+        this (``ShardProducer.poll_backpressure``) to throttle their own
+        measurement while the daemon digests a backlog."""
+        incoming = sum(1 for fn in os.listdir(self.incoming_dir)
+                       if fn.endswith(ENVELOPE_SUFFIX))
+        return incoming + len(self._pending_ids())
+
     def status(self) -> dict:
         journal = self.journal()
         db = self.database()
-        return {
+        status = {
             "db": self.db_dir,
             "profiles": len(db.profile_ids) if db else 0,
             "contexts": len(db.frames) if db else 0,
@@ -354,6 +379,9 @@ class FleetDaemon:
                 fn for fn in os.listdir(self.quarantine_dir)
                 if not fn.endswith(".reason")),
         }
+        status["spool_depth"] = (len(status["incoming"])
+                                 + len(status["pending"]))
+        return status
 
 
 # --------------------------------------------------------------------------
@@ -408,6 +436,12 @@ class SocketIngest(threading.Thread):
     def _serve(self, conn: socket.socket) -> None:
         raw = self._recv_exact(conn, _LEN.size)
         (n,) = _LEN.unpack(raw)
+        if n == 0:
+            # a zero-length frame is a status poll (backpressure):
+            # reply OK + the daemon's status JSON on one line
+            conn.sendall(b"OK " + json.dumps(
+                self.fleet.status(), sort_keys=True).encode() + b"\n")
+            return
         if n > MAX_ENVELOPE_BYTES:
             conn.sendall(b"ERR envelope too large\n")
             return

@@ -13,6 +13,7 @@ finds it with the derived metric, reproducing the PeleC case study.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 from typing import Optional
 
@@ -24,13 +25,31 @@ from repro.configs import get_config
 from repro.configs.base import ModelConfig
 from repro.launch import steps as steps_mod
 from repro.models import transformer as T
+from repro.serving.window import DECODE, PREFILL
+
+
+def _maybe_window(serving, rid: str, phase: str, tokens: int):
+    if serving is None:
+        return contextlib.nullcontext()
+    return serving.request(rid, phase, tokens=tokens)
 
 
 def serve(cfg: ModelConfig, *, n_requests: int = 8, batch: int = 4,
           prompt_len: int = 32, gen_len: int = 16, seed: int = 0,
           profile_dir: Optional[str] = None, redundant_sync: bool = False,
-          opts: Optional[T.ModelOptions] = None):
-    """Returns (generated tokens (n_requests, gen_len), profile paths)."""
+          opts: Optional[T.ModelOptions] = None, serving=None,
+          rid_prefix: str = ""):
+    """Returns (generated tokens (n_requests, gen_len), profile paths).
+
+    ``serving`` takes a started ``repro.serving.ServingProfiler``: every
+    dispatch then runs through it inside per-request/per-phase windows
+    (``r<lo>`` / ``r<lo>-r<hi>`` for a batch), feeding latency stats plus
+    governor/telemetry ticks; the caller owns its lifecycle and output.
+    Mutually exclusive with ``profile_dir`` (which owns a plain Profiler
+    internally, as before).  ``rid_prefix`` disambiguates request ids
+    when several serve() passes feed one profiler (window identities
+    with equal ids unify in the database).
+    """
     opts = opts or T.ModelOptions(q_chunk=min(256, prompt_len),
                                   kv_chunk=min(256, prompt_len),
                                   ssm_chunk=min(64, prompt_len),
@@ -42,32 +61,56 @@ def serve(cfg: ModelConfig, *, n_requests: int = 8, batch: int = 4,
     prefill_fn = jax.jit(steps_mod.make_prefill_step(cfg, None, opts))
     decode_fn = jax.jit(steps_mod.make_decode_step(cfg, None, opts))
 
-    prof = None
-    mid_p = mid_d = None
+    if serving is not None and profile_dir:
+        raise ValueError("pass either serving= or profile_dir=, not both")
+    prof = serving.profiler if serving is not None else None
+    own_prof = False
     if profile_dir:
         from repro.core.profiler import Profiler
         prof = Profiler(profile_dir, tracing=True, rng_seed=seed)
         prof.start()
+        own_prof = True
+
+    # --- warm-up: compile and register BOTH modules before the measured
+    # loop.  Compilation used to run lazily inside the first batch's
+    # dispatch, so its trace event (and any serving latency derived from
+    # it) carried the full XLA compile time.
+    warm_in = {"tokens": jnp.zeros((batch, prompt_len), jnp.int32)}
+    logits, cache = prefill_fn(params, warm_in)
+    cache = _grow_cache(cfg, cache, batch, max_len, prompt_len)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos0 = jnp.int32(prompt_len)
+    warm_logits, _ = decode_fn(params, cache, pos0, token=tok)
+    jax.block_until_ready(warm_logits)
+    mid_p = mid_d = None
+    if prof is not None:
+        mid_p = prof.register_module(
+            "prefill",
+            prefill_fn.lower(params, warm_in).compile().as_text())
+        mid_d = prof.register_module(
+            "decode_step",
+            decode_fn.lower(params, cache, pos0,
+                            token=tok).compile().as_text())
 
     rng = np.random.default_rng(seed)
     outs = []
     n_batches = (n_requests + batch - 1) // batch
     for bi in range(n_batches):
+        lo, hi = bi * batch, min(bi * batch + batch, n_requests)
+        rid = f"{rid_prefix}r{lo}" if hi - lo <= 1 \
+            else f"{rid_prefix}r{lo}-r{hi - 1}"
         toks = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len),
                                         np.int32))
         batch_in = {"tokens": toks}
         # --- prefill ------------------------------------------------------
-        if prof is not None:
-            if mid_p is None:
-                mid_p = prof.register_module(
-                    "prefill", prefill_fn.lower(
-                        params, batch_in).compile().as_text())
-            with prof.dispatch("kernel", "prefill", stream=0,
-                               module_id=mid_p):
+        with _maybe_window(serving, rid, PREFILL, batch * prompt_len):
+            if prof is not None:
+                with prof.dispatch("kernel", "prefill", stream=0,
+                                   module_id=mid_p):
+                    logits, cache = prefill_fn(params, batch_in)
+                    jax.block_until_ready(logits)
+            else:
                 logits, cache = prefill_fn(params, batch_in)
-                jax.block_until_ready(logits)
-        else:
-            logits, cache = prefill_fn(params, batch_in)
         # cache is sized prompt_len by prefill; decode needs max_len slots
         cache = _grow_cache(cfg, cache, batch, max_len, prompt_len)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
@@ -75,30 +118,27 @@ def serve(cfg: ModelConfig, *, n_requests: int = 8, batch: int = 4,
         # --- decode ---------------------------------------------------------
         for t in range(gen_len - 1):
             pos = jnp.int32(prompt_len + t)
-            if prof is not None:
-                if mid_d is None:
-                    mid_d = prof.register_module(
-                        "decode_step", decode_fn.lower(
-                            params, cache, pos,
-                            token=tok).compile().as_text())
-                with prof.dispatch("kernel", "decode_step", stream=0,
-                                   module_id=mid_d):
+            with _maybe_window(serving, rid, DECODE, batch):
+                if prof is not None:
+                    with prof.dispatch("kernel", "decode_step", stream=0,
+                                       module_id=mid_d):
+                        logits, cache = decode_fn(params, cache, pos,
+                                                  token=tok)
+                        jax.block_until_ready(logits)
+                    if redundant_sync:
+                        # §8.4.1: a sync with no kernel between it and the
+                        # previous sync — found by diff = sync - kernels
+                        with prof.dispatch("sync", "device_sync", stream=0):
+                            jax.block_until_ready(logits)
+                        with prof.dispatch("sync", "device_sync", stream=0):
+                            jax.block_until_ready(logits)
+                else:
                     logits, cache = decode_fn(params, cache, pos, token=tok)
-                    jax.block_until_ready(logits)
-                if redundant_sync:
-                    # §8.4.1: a sync with no kernel between it and the
-                    # previous sync — found by diff = sync - kernels
-                    with prof.dispatch("sync", "device_sync", stream=0):
-                        jax.block_until_ready(logits)
-                    with prof.dispatch("sync", "device_sync", stream=0):
-                        jax.block_until_ready(logits)
-            else:
-                logits, cache = decode_fn(params, cache, pos, token=tok)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
             gen.append(tok)
         outs.append(jnp.stack(gen, axis=1))
     paths = None
-    if prof is not None:
+    if own_prof:
         prof.flush()
         paths = prof.write()
         prof.stop()

@@ -258,3 +258,110 @@ def windowed_blame(lines: Sequence[TraceData], t0: int, t1: int
     gpu = [_clip_line(td, t0, t1) for td in lines
            if td.identity.get("type") == "gpu"]
     return blame_gpu_idleness(cpu, gpu)
+
+
+# --------------------------------------------------------------------------
+# Per-request attribution (repro.serving measurement windows)
+# --------------------------------------------------------------------------
+def window_labels(db) -> Tuple[List[Optional[str]], List[Optional[str]]]:
+    """Per-context ``(request_id, phase)``: each context inherits the
+    nearest enclosing serving-window frames (the ``request:<id>`` /
+    ``phase:<p>`` scheme of repro.serving.window).  Contexts outside any
+    window carry ``(None, None)``."""
+    from repro.serving.window import window_label
+    parents = np.asarray(db.parents, np.int64)
+    n = len(db.frames)
+    req: List[Optional[str]] = [None] * n
+    ph: List[Optional[str]] = [None] * n
+    done = np.zeros(n, bool)
+    for start in range(n):
+        if done[start]:
+            continue
+        chain = []
+        i = start
+        while i >= 0 and not done[i]:
+            chain.append(i)
+            i = int(parents[i])
+        r, p = (req[i], ph[i]) if i >= 0 else (None, None)
+        for j in reversed(chain):
+            fr, fp = window_label(db.frames[j])
+            if fr is not None:
+                r, p = fr, None     # a new request window resets the phase
+            if fp is not None:
+                p = fp
+            req[j], ph[j] = r, p
+            done[j] = True
+    return req, ph
+
+
+def request_attribution(lines: Sequence[TraceData], db, *,
+                        t0: Optional[int] = None, t1: Optional[int] = None,
+                        gpu_only: bool = True
+                        ) -> List[Tuple[str, float, Dict[str, float]]]:
+    """Which request burned the GPU: time-weighted busy ns per request id
+    over the window, split by phase — rows ``(request_id, total_ns,
+    {phase: ns})`` sorted by total descending.  ``gpu_only`` restricts to
+    GPU stream lines (the question the serving operator asks); pass
+    False to attribute host lines too."""
+    sel = [td for td in lines
+           if not gpu_only or td.identity.get("type") == "gpu"]
+    if t0 is None:
+        t0 = min((int(td.starts[0]) for td in sel if len(td.starts)),
+                 default=0)
+    if t1 is None:
+        t1 = max((int(td.ends.max()) for td in sel if len(td.ends)),
+                 default=t0)
+    prof = interval_profile(sel, len(db.frames), t0, t1)
+    req, ph = window_labels(db)
+    rows: Dict[str, Dict[str, float]] = {}
+    for g in np.flatnonzero(prof):
+        r = req[g]
+        if r is None:
+            continue
+        by = rows.setdefault(r, {})
+        p = ph[g] or "other"
+        by[p] = by.get(p, 0.0) + float(prof[g])
+    out = [(r, sum(by.values()), by) for r, by in rows.items()]
+    out.sort(key=lambda row: (-row[1], row[0]))
+    return out
+
+
+def request_spans(lines: Sequence[TraceData], db
+                  ) -> Dict[Tuple[str, str], Tuple[int, int]]:
+    """Per ``(request_id, phase)``: the ``[min start, max end)`` envelope
+    of every trace event attributed to it — the trace-derived request
+    latency (GPU time the request actually occupied, across streams)."""
+    req, ph = window_labels(db)
+    spans: Dict[Tuple[str, str], Tuple[int, int]] = {}
+    for td in lines:
+        ctx = np.asarray(td.ctx, np.int64)
+        if not len(ctx):
+            continue
+        starts = np.asarray(td.starts, np.int64)
+        ends = np.asarray(td.ends, np.int64)
+        valid = (ctx >= 0) & (ctx < len(req))
+        for g in np.unique(ctx[valid]):
+            r = req[g]
+            if r is None:
+                continue
+            key = (r, ph[g] or "other")
+            on = ctx == g
+            s0, e1 = int(starts[on].min()), int(ends[on].max())
+            cur = spans.get(key)
+            spans[key] = ((min(cur[0], s0), max(cur[1], e1)) if cur
+                          else (s0, e1))
+    return spans
+
+
+def request_latency_percentiles(lines: Sequence[TraceData], db, *,
+                                qs: Sequence[float] = (50.0, 99.0)
+                                ) -> Dict[str, Dict[float, float]]:
+    """Per phase: latency percentiles in ms over per-request trace spans
+    — the post-hoc cross-check of the live ``ServingStats`` percentiles
+    (those are wall-clock windows; these are trace envelopes)."""
+    by_phase: Dict[str, List[int]] = {}
+    for (_, p), (s, e) in request_spans(lines, db).items():
+        by_phase.setdefault(p, []).append(e - s)
+    return {p: {float(q): float(np.percentile(
+                np.asarray(d, np.int64), q)) / 1e6 for q in qs}
+            for p, d in sorted(by_phase.items())}

@@ -318,6 +318,40 @@ def test_metric_taxonomy_mismatch_quarantines(tmp_path):
     assert_db_identical(daemon.db_dir, ref)
 
 
+def test_bootstrap_taxonomy_is_majority_not_id_order(tmp_path):
+    """Bootstrapping an EMPTY fleet db, the taxonomy reference is the
+    batch majority — shard ids are content hashes, so any id-order rule
+    would let an arbitrary outlier shard win the database (this flaked
+    ~10% of runs before the majority vote: envelope bytes embed staging
+    paths, so ids permute run to run)."""
+    def one_round(sub, odd_first):
+        sub.mkdir()
+        shard_dbs, ref = build_fleet_inputs(sub, n_shards=2)
+        reg = MetricRegistry()
+        weird = reg.register_kind("weird", ("zaps",))
+        cct = CCT()
+        cct.insert_path([Frame(HOST, "main", "app.py", 1)]).metrics.add(
+            weird, "zaps", 7.0)
+        p = str(sub / "r99.rpro")
+        write_profile(p, cct, reg, {"rank": 99, "type": "cpu"}, [])
+        odd_db = str(sub / "odd")
+        aggregate([p], odd_db)
+        daemon = fresh_daemon(sub)
+        producer = fresh_producer(sub, daemon)
+        order = [odd_db] + shard_dbs if odd_first else shard_dbs + [odd_db]
+        for db in order:
+            producer.stage(db)
+        producer.deliver()
+        r = daemon.poll_once()
+        assert len(r.applied) == 2
+        assert len(r.quarantined) == 1
+        assert "metric taxonomy" in r.quarantined[0][1]
+        assert_db_identical(daemon.db_dir, ref)
+
+    one_round(tmp_path / "odd_first", True)
+    one_round(tmp_path / "odd_last", False)
+
+
 def test_daemon_fold_applies_retention(tmp_path):
     """Retention at fold time composes with the journal (both commit in
     the same swap)."""
