@@ -17,9 +17,10 @@ import time
 import traceback
 
 from benchmarks import (bench_aggregation, bench_channels, bench_counters,
-                        bench_fleet, bench_merge, bench_overhead,
-                        bench_pipeline, bench_reconstruction, bench_roofline,
-                        bench_serving, bench_sparse, bench_traceview)
+                        bench_fleet, bench_kstruct, bench_merge,
+                        bench_overhead, bench_pipeline, bench_reconstruction,
+                        bench_roofline, bench_serving, bench_sparse,
+                        bench_traceview)
 
 ALL = {
     "channels": bench_channels,        # §4.1 wait-free channels
@@ -34,15 +35,45 @@ ALL = {
     "pipeline": bench_pipeline,        # ISSUE 5 shard-driver scaling
     "fleet": bench_fleet,              # ISSUE 6 daemon ingest + recovery
     "serving": bench_serving,          # ISSUE 7 always-on serving profiler
+    "kstruct": bench_kstruct,          # ISSUE 8 kernel-interior sampling
 }
 
 # benchmarks whose results are persisted as BENCH_<name>.json
 TRACKED = ("aggregation", "channels", "traceview", "counters", "merge",
-           "pipeline", "fleet", "serving")
+           "pipeline", "fleet", "serving", "kstruct")
 
 # --compare: a tracked stage time growing more than this fraction over
 # its committed BENCH_<name>.json baseline fails the sweep
 COMPARE_TOLERANCE = 0.25
+
+
+def calibration_probe(repeats: int = 3) -> float:
+    """Machine-speed reference: seconds for a fixed, deterministic
+    CPU workload (best of ``repeats``) — the bench_pipeline paired-run
+    idea applied across *processes*: a committed baseline records the
+    probe next to its stage times, so ``--compare`` can gate on the
+    machine-normalized ratio ``stage_s / calibration_s`` instead of
+    absolute wall-clock, which swings +-30% between runs of this 2-core
+    CI container (ROADMAP flagged the old absolute gate as noise-prone).
+    """
+    import numpy as np
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        rng = np.random.default_rng(0)
+        a = rng.standard_normal((256, 256))
+        small = rng.standard_normal(128)
+        acc = 0.0
+        for _ in range(60):
+            a = a @ a.T / 256.0
+            acc += float(np.abs(a).sum())
+            sorted(float(x) for x in a.ravel()[:4096])
+            # tiny-array ops: the benchmarks are dominated by numpy
+            # call overhead on small arrays, so the probe must be too
+            for _ in range(20):
+                acc += float(np.floor(small * 3.0).sum())
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def budget_regressions(name: str, results: dict) -> list:
@@ -62,7 +93,8 @@ def budget_regressions(name: str, results: dict) -> list:
 
 def baseline_regressions(name: str, results: dict, baseline: dict,
                          small: bool,
-                         tol: float = COMPARE_TOLERANCE) -> list:
+                         tol: float = COMPARE_TOLERANCE,
+                         calibration: float = 0.0) -> list:
     """``--compare`` contract: every measured stage time (``*_s`` keys,
     lower is better) is held against the committed ``BENCH_<name>.json``
     baseline; growing more than ``tol`` (default 25%) is a regression
@@ -70,20 +102,38 @@ def baseline_regressions(name: str, results: dict, baseline: dict,
     both numbers.  Budget bounds (``*_budget*``) and pinned seed
     numbers (``seed_*``) are constants, not measurements, and are
     skipped; so is a baseline recorded at a different problem size
-    (``small`` mismatch)."""
+    (``small`` mismatch).
+
+    When both this run's ``calibration`` probe time and the baseline's
+    recorded ``calibration_s`` are available, the gate is the
+    machine-normalized *ratio* ``stage_s / calibration_s`` on each side
+    (bench_pipeline's paired-repeat idea across processes): a slow CI
+    host inflates stage and probe alike, so uniform machine noise
+    cancels and only genuine per-stage regressions trip the gate.
+    Without a probe on either side it falls back to absolute seconds."""
     if not baseline or baseline.get("small", False) != small:
         return []
     base = baseline.get("results", {})
+    base_cal = float(baseline.get("calibration_s", 0.0) or 0.0)
+    paired = calibration > 0.0 and base_cal > 0.0
     out = []
     for key, new in results.items():
-        if not key.endswith("_s") or "_budget" in key \
-                or key.startswith("seed_"):
+        if not key.endswith("_s") or key.endswith("_per_s") \
+                or "_budget" in key or key.startswith("seed_"):
             continue
         old = base.get(key)
         if not isinstance(old, (int, float)) \
                 or not isinstance(new, (int, float)) or old <= 0:
             continue
-        if new > old * (1 + tol):
+        if paired:
+            old_r, new_r = old / base_cal, new / calibration
+            if new_r > old_r * (1 + tol):
+                out.append(
+                    f"{name}: {key} regressed {old_r:.2f}x -> {new_r:.2f}x "
+                    f"calibration (+{(new_r / old_r - 1):.0%}, tolerance "
+                    f"{tol:.0%}; raw {old:.3f}s -> {new:.3f}s, probe "
+                    f"{base_cal:.3f}s -> {calibration:.3f}s)")
+        elif new > old * (1 + tol):
             out.append(f"{name}: {key} regressed {old:.3f}s -> {new:.3f}s "
                        f"(+{(new / old - 1):.0%}, tolerance {tol:.0%})")
     return out
@@ -116,6 +166,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     failures = 0
     regressions = []
+    cal = calibration_probe()
+    print(f"# calibration probe: {cal:.3f}s", flush=True)
     for name, mod in ALL.items():
         if args.only and name != args.only:
             continue
@@ -134,12 +186,14 @@ def main(argv=None):
                 if args.compare and name in TRACKED:
                     regressions += baseline_regressions(
                         name, results,
-                        load_baseline(args.baseline_dir, name), args.small)
+                        load_baseline(args.baseline_dir, name), args.small,
+                        calibration=cal)
             if name in TRACKED and isinstance(results, dict):
                 os.makedirs(args.json_dir, exist_ok=True)
                 path = os.path.join(args.json_dir, f"BENCH_{name}.json")
                 with open(path, "w") as f:
                     json.dump({"bench": name, "small": args.small,
+                               "calibration_s": cal,
                                "results": results,
                                "took_s": time.perf_counter() - t0},
                               f, indent=1)

@@ -141,6 +141,25 @@ class Profiler:
     def module(self, mid: int) -> HloModule:
         return self._modules[mid]
 
+    def register_kernel_structures(self, mid: int, structures,
+                                   matches: Optional[Dict[str, str]] = None
+                                   ) -> int:
+        """Bind recovered kernel-interior structures
+        (``repro.core.kstruct.KernelStructure``) to module ``mid``'s
+        ``custom-call`` ops.  Subsequent PC samples descend into the
+        kernels' interiors (loops / inlined scopes / source lines)
+        instead of stopping at the opaque op.  Returns total ops bound."""
+        mod = self._modules[mid]
+        matches = matches or {}
+        bound = 0
+        for ks in structures:
+            bound += mod.bind_kernel_structure(ks, matches.get(ks.name))
+        if bound:
+            # interior leaves change the per-op context paths
+            self._op_ctx_cache = {
+                k: v for k, v in self._op_ctx_cache.items() if k[0] != mid}
+        return bound
+
     def start(self):
         if not self._started:
             self._monitor.start()
@@ -201,6 +220,23 @@ class Profiler:
             yield
         finally:
             del stack[n:]
+
+    @contextlib.contextmanager
+    def window_exclusive(self, *frames: Frame):
+        """Like ``window`` but *replaces* the thread's current window
+        stack for the duration instead of nesting under it.  This is the
+        continuous-batching primitive (repro.serving.window.RequestWindow
+        .step): overlapping request windows on one serving thread stamp
+        each dispatch with exactly one request's frames, so interleaved
+        decode steps never double-count under whichever window happened
+        to open first."""
+        stack = self._window_frames()
+        saved = stack[:]
+        stack[:] = list(frames)
+        try:
+            yield
+        finally:
+            stack[:] = saved
 
     def overhead_counters(self) -> Dict[str, int]:
         """Cumulative dispatch-path self-accounting (the governor's
@@ -322,21 +358,36 @@ class Profiler:
                          for s in ("compute", "memory", "collective")}
             i_samp, i_fl, i_by = midx["samples"], midx["flops"], midx["bytes"]
             vec = np.zeros(len(ikind.metrics))
+            kstructs = mod.kernel_structures()
             for s in act.samples:
                 op = ops[s.op_index] if s.op_index < len(ops) else None
                 if op is None:
                     continue
-                key = (act.module_id, s.op_index)
+                leaf = getattr(s, "leaf", -1)
+                key = (act.module_id, s.op_index, leaf)
                 frames = self._op_ctx_cache.get(key)
                 if frames is None:
                     frames = tuple(mod.op_context(op))
+                    if leaf >= 0:
+                        # kernel-interior descent (kstruct): the leaf's
+                        # GPU_FUNC/GPU_LOOP/GPU_OP chain hangs under the
+                        # kernel's own GPU_OP context — interiors ride
+                        # the database as ordinary tree paths
+                        ks = kstructs.get(s.op_index)
+                        if ks is not None and leaf < len(ks.leaves):
+                            frames = frames + ks.leaf_frames(leaf)
                     self._op_ctx_cache[key] = frames
                 node = st.cct.insert_path(list(frames), parent=placeholder)
+                fl, by = op.flops, op.bytes
+                if leaf >= 0:
+                    ks = kstructs.get(s.op_index)
+                    if ks is not None and leaf < len(ks.leaves):
+                        fl, by = ks.leaves[leaf].flops, ks.leaves[leaf].bytes
                 vec[:] = 0.0
                 vec[i_samp] = s.count
                 vec[stall_col[s.stall]] = s.count
-                vec[i_fl] = op.flops * s.count / total
-                vec[i_by] = op.bytes * s.count / total
+                vec[i_fl] = fl * s.count / total
+                vec[i_by] = by * s.count / total
                 node.metrics.add_vec(ikind, vec)
 
     def _stream_profile_sink(self, stream: int, act: GpuActivity,

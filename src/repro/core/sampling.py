@@ -41,6 +41,7 @@ class Sample:
     op_index: int            # index of the op within the module
     stall: str               # one of STALL_CLASSES
     count: int
+    leaf: int = -1           # kernel-interior leaf index (kstruct), or -1
 
 
 def op_time_model(op: HloOp) -> Dict[str, float]:
@@ -68,12 +69,21 @@ def op_weights(module: HloModule) -> "np.ndarray":
     if cached is not None:
         return cached
     ops = module.all_ops()
+    kstructs = module.kernel_structures() \
+        if hasattr(module, "kernel_structures") else {}
     w = np.zeros(len(ops))
     stall = np.zeros(len(ops), np.int32)
     for i, op in enumerate(ops):
         if op.opcode in _NON_INST:
             continue
         t = op_time_model(op)
+        ks = kstructs.get(op.index)
+        if ks is not None:
+            # a bound Pallas kernel parses as an opaque custom-call with
+            # flops=0; its recovered interior structure supplies the
+            # modeled compute/memory terms instead
+            t["compute"] = max(t["compute"], ks.total_flops / PEAK_FLOPS)
+            t["memory"] = max(t["memory"], ks.total_bytes / HBM_BW)
         w[i] = max(t.values())
         stall[i] = int(np.argmax([t["compute"], t["memory"],
                                   t["collective"]]))
@@ -113,12 +123,36 @@ def pc_samples(module: HloModule, duration_s: float,
         counts = rng.multinomial(n, p)
     else:
         counts = np.floor(n * p + 0.5).astype(np.int64)
+        if counts.sum() == 0:
+            # expectation rounding can floor *every* op to zero when the
+            # governor cap forces n=1 and weights are spread thin across
+            # many ops (max p < 0.5) — the documented guarantee is that
+            # at least one sample is always drawn, attributed to the
+            # heaviest op
+            counts[int(np.argmax(p))] = 1
     # touch only the ops that drew samples: with the governor capping n
     # far below the op count, the dispatch-path cost must be O(samples),
     # not O(module ops)
-    return [Sample(op_index=ops[i].index, stall=STALL_CLASSES[stall[i]],
-                   count=int(counts[i]))
-            for i in np.nonzero(counts)[0]]
+    kstructs = module.kernel_structures() \
+        if hasattr(module, "kernel_structures") else {}
+    out: List[Sample] = []
+    for i in np.nonzero(counts)[0]:
+        op = ops[i]
+        c = int(counts[i])
+        ks = kstructs.get(op.index)
+        if ks is None:
+            out.append(Sample(op_index=op.index,
+                              stall=STALL_CLASSES[stall[i]], count=c))
+            continue
+        # two-level draw (§7): the op's samples descend into the bound
+        # kernel-interior structure, apportioned over leaves by modeled
+        # leaf weight — exactly ``c`` samples total, so the governor's
+        # per-dispatch cap survives the descent unchanged
+        for leaf, lc in ks.distribute(c, rng):
+            out.append(Sample(op_index=op.index,
+                              stall=ks.leaves[leaf].stall, count=lc,
+                              leaf=leaf))
+    return out
 
 
 def instruction_counts(module: HloModule,

@@ -86,9 +86,24 @@ class HloOp:
     trip_count: int = 1            # while ops: known_trip_count from XLA
 
     @property
+    def collective_kind(self) -> str:
+        """Base collective opcode ("all-reduce", ...) with any async
+        ``-start``/``-done`` suffix removed, or "" for non-collectives.
+
+        NB: this must strip a *suffix*, not a character set —
+        ``"reduce-scatter".rstrip("-start")`` eats the trailing ``r``
+        (rstrip takes characters, not a substring) and previously
+        misclassified reduce-scatter via that path."""
+        opc = self.opcode
+        for suffix in ("-start", "-done"):
+            if opc.endswith(suffix):
+                opc = opc[: -len(suffix)]
+                break
+        return opc if opc in COLLECTIVES else ""
+
+    @property
     def is_collective(self) -> bool:
-        return self.opcode.rstrip("-start") in COLLECTIVES or \
-            any(self.opcode.startswith(c) for c in COLLECTIVES)
+        return bool(self.collective_kind)
 
 
 @dataclasses.dataclass
@@ -196,9 +211,43 @@ class HloModule:
         return frames
 
     def collective_ops(self) -> List[HloOp]:
+        """Collective *initiation* ops: sync spellings and async
+        ``-start`` halves.  ``-done`` completions are classified
+        collective (is_collective) but carry no payload of their own, so
+        byte accounting skips them to avoid double counting."""
         return [op for op in self.all_ops()
-                if any(op.opcode == c or op.opcode == c + "-start"
-                       for c in COLLECTIVES)]
+                if op.collective_kind and not op.opcode.endswith("-done")]
+
+    # -- kernel-interior structures (repro.core.kstruct) ------------------
+    def bind_kernel_structure(self, ks, match: Optional[str] = None) -> int:
+        """Attach a ``kstruct.KernelStructure`` to every ``custom-call``
+        op whose ``op_name`` / attrs mention ``match`` (default: the
+        structure's kernel name).  This is the §5 binding step: the
+        opaque GPU binary region (a Pallas kernel behind a custom-call)
+        gets its recovered interior structure, so pc_samples can descend
+        into it.  Returns the number of ops bound."""
+        needle = match or ks.name
+        bound = 0
+        for op in self.all_ops():
+            if op.opcode != "custom-call":
+                continue
+            if needle in op.op_name or needle in op.attrs:
+                if not hasattr(self, "_kernel_structs"):
+                    self._kernel_structs = {}
+                self._kernel_structs[op.index] = ks
+                bound += 1
+        if bound:
+            # op weights and counter totals change: bound custom-calls
+            # gain the kernel's modeled interior cost (custom-call
+            # parses with flops=0)
+            self._op_weights_cache = None
+            self._op_p_cache = None
+            self._counter_cache = None
+        return bound
+
+    def kernel_structures(self) -> Dict[int, object]:
+        """op index -> bound KernelStructure (empty if none bound)."""
+        return getattr(self, "_kernel_structs", None) or {}
 
     def comp_multipliers(self) -> Dict[str, float]:
         """Computation -> expected execution count.
@@ -457,7 +506,7 @@ def collective_bytes(module: HloModule) -> Dict[str, float]:
         # scan-over-layers) execute trip_count times
         in_bytes *= max(mults.get(op.comp, 1.0), 1.0)
         g = max(op.group_size, 1)
-        kind = op.opcode.replace("-start", "")
+        kind = op.collective_kind
         if kind == "all-reduce":
             wire = 2.0 * (g - 1) / g * in_bytes
         elif kind == "all-gather":

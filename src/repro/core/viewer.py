@@ -153,6 +153,64 @@ def counter_table(db: Database, *, stat: str = "sum", top: int = 10,
     return "\n".join(lines)
 
 
+def top_hot_loops(db: Database, *, stat: str = "sum", top: int = 15) -> str:
+    """Kernel-interior hot-spot table (paper §7 PC sampling inside GPU
+    binaries; repro.core.kstruct): kernel -> loop -> source line with
+    the stall-class breakdown.
+
+    Interior contexts are found *structurally*: a GPU_FUNC frame whose
+    parent is a GPU_OP frame is a kstruct kernel root (the HLO structure
+    path never hangs children under GPU_OP), so no new frame kind — and
+    no file-format change — is needed."""
+    from repro.core.cct import GPU_FUNC, GPU_LOOP, GPU_OP
+    try:
+        cols = {m: db.stats[stat][:, db.metric_id(f"gpu_inst/{m}")]
+                for m in ("samples", "stall_compute", "stall_memory",
+                          "stall_collective")}
+    except (KeyError, ValueError):
+        return "HOT LOOPS  (no gpu_inst kind in this database)"
+    kids: Dict[int, List[int]] = {}
+    for gid, par in enumerate(db.parents):
+        if par >= 0:
+            kids.setdefault(int(par), []).append(gid)
+    roots = [g for g, f in enumerate(db.frames)
+             if f.kind == GPU_FUNC and db.parents[g] >= 0
+             and db.frames[int(db.parents[g])].kind == GPU_OP]
+    rows: Dict[tuple, List[float]] = {}
+    for r in roots:
+        kernel = db.frames[r].name
+        stack = [(c, "-") for c in kids.get(r, [])]
+        while stack:
+            g, loop = stack.pop()
+            f = db.frames[g]
+            if f.kind == GPU_LOOP:
+                loop = f.name
+            if f.kind == GPU_OP:
+                key = (kernel, loop, f"{f.module}:{f.line}", f.name)
+                acc = rows.setdefault(key, [0.0, 0.0, 0.0, 0.0])
+                acc[0] += cols["samples"][g]
+                acc[1] += cols["stall_compute"][g]
+                acc[2] += cols["stall_memory"][g]
+                acc[3] += cols["stall_collective"][g]
+            stack.extend((c, loop) for c in kids.get(g, []))
+    ordered = sorted(rows.items(), key=lambda kv: (-kv[1][0], kv[0]))[:top]
+    total = sum(v[0] for v in rows.values()) or 1.0
+    header = ["kernel", "loop", "line", "op", "samples", "%",
+              "compute", "memory", "collective"]
+    table = [[k[0], k[1], k[2], k[3], _fmt(v[0]),
+              f"{v[0] / total * 100:.1f}",
+              _fmt(v[1]), _fmt(v[2]), _fmt(v[3])]
+             for k, v in ordered]
+    widths = [max(len(header[i]), *(len(r[i]) for r in table)) if table
+              else len(header[i]) for i in range(len(header))]
+    lines = [f"HOT LOOPS  [{stat}]  ({len(roots)} kernel context(s), "
+             f"{len(rows)} interior line(s))",
+             "  ".join(h.ljust(widths[i]) for i, h in enumerate(header))]
+    for r in table:
+        lines.append("  ".join(v.ljust(widths[i]) for i, v in enumerate(r)))
+    return "\n".join(lines)
+
+
 def thread_plot(db: Database, cms_reader, ctx: int, metric: str,
                 ) -> Tuple[np.ndarray, np.ndarray]:
     """(profile ids, values) for one CCT node across profiles — the

@@ -46,6 +46,27 @@ _NON_INST = frozenset({"parameter", "constant", "get-tuple-element", "tuple",
 _CONTROL = ("fusion", "call", "while", "conditional")
 
 
+def _kstruct_totals(ks) -> tuple:
+    """(flops, mxu_flops, transcendental_elems, n_inst, active_s) of one
+    bound KernelStructure, cached on it (read() is per-dispatch)."""
+    cached = getattr(ks, "_counter_totals", None)
+    if cached is not None:
+        return cached
+    from repro.core.kstruct import _TRANSCENDENTAL
+    kf = km = kt = ka = 0.0
+    for lf in ks.leaves:
+        kf += lf.flops
+        ka += lf.weight
+        op = lf.frames[-1].name
+        if op == "dot_general":
+            km += lf.flops
+        elif op in _TRANSCENDENTAL:
+            kt += lf.flops / 10.0    # kstruct weights transcendentals 10x
+    totals = (kf, km, kt, float(len(ks.leaves)), ka)
+    ks._counter_totals = totals
+    return totals
+
+
 def static_counters(module: HloModule,
                     cost: Optional[Dict[str, float]] = None) -> np.ndarray:
     """Per-execution counter values that depend only on the compiled
@@ -69,6 +90,8 @@ def static_counters(module: HloModule,
     vec = np.zeros(_N, np.float64)
     mults = module.comp_multipliers()
     fused = module.fused_comps()
+    kstructs = module.kernel_structures() \
+        if hasattr(module, "kernel_structures") else {}
     flops = mxu = transcendental = 0.0
     read_b = write_b = 0.0
     inst = active_s = 0.0
@@ -91,6 +114,21 @@ def static_counters(module: HloModule,
                 inst += m
                 t = op_time_model(op)
                 active_s += max(t.values()) * m
+            ks = kstructs.get(op.index)
+            if ks is not None:
+                # kernel-interior refinement (repro.core.kstruct): a
+                # bound Pallas kernel parses as an opaque custom-call
+                # with zero flops; its recovered leaves supply the
+                # interior-granularity compute/instruction totals the
+                # HLO text cannot see.  HBM traffic stays with the
+                # custom-call's own operand/result accounting (interior
+                # get/swap traffic is VMEM, not HBM).
+                kf, km, kt, ki, ka = _kstruct_totals(ks)
+                flops += kf * m
+                mxu += km * m
+                transcendental += kt * m
+                inst += ki * m
+                active_s += ka * m
 
     scale_f = scale_b = 1.0
     if cost:

@@ -104,3 +104,19 @@ def flash_decode_fwd(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 def _vmem(shape):
     import jax.experimental.pallas.tpu as pltpu
     return pltpu.VMEM(shape, jnp.float32)
+
+
+# kstruct annotation: grid (B, Hkv, nk); ki over kv-cache blocks is the
+# sequential split-KV loop carrying the online-softmax scratch
+KSTRUCT_GRID_LOOPS = {2: "kv_blocks"}
+
+
+def kernel_structure(*, block_kv: int = 512):
+    """Recover this kernel's interior structure (repro.core.kstruct)."""
+    from repro.core.kstruct import KernelStructure
+    q = jnp.zeros((1, 4, 64), jnp.bfloat16)
+    cache = jnp.zeros((1, 2 * block_kv, 2, 64), jnp.bfloat16)
+    return KernelStructure.from_function(
+        flash_decode_fwd, q, cache, cache, block_kv,
+        name="decode_attention", grid_loops=KSTRUCT_GRID_LOOPS,
+        block_kv=block_kv, interpret=True)

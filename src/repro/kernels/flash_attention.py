@@ -143,3 +143,23 @@ def _vmem(shape):
     """VMEM fp32 scratch spec."""
     import jax.experimental.pallas.tpu as pltpu
     return pltpu.VMEM(shape, jnp.float32)
+
+
+# kstruct annotation: the innermost grid axis (ki over kv blocks) is
+# sequential on TPU — it is the kernel's outer loop, carrying the
+# (m, l, acc) online-softmax scratch across steps
+KSTRUCT_GRID_LOOPS = {4: "kv_blocks"}
+
+
+def kernel_structure(*, block_q: int = 128, block_kv: int = 128):
+    """Recover this kernel's interior structure (repro.core.kstruct §5
+    analogue) by tracing the wrapper at a small representative shape.
+    The recovered loop/scope/line tree is shape-independent — only leaf
+    weights scale — so one trace serves every deployment shape."""
+    from repro.core.kstruct import KernelStructure
+    q = jnp.zeros((1, 2 * block_q, 2, 64), jnp.bfloat16)
+    kv = jnp.zeros((1, 2 * block_q, 1, 64), jnp.bfloat16)
+    return KernelStructure.from_function(
+        flash_attention_fwd, q, kv, kv, name="flash_attention",
+        grid_loops=KSTRUCT_GRID_LOOPS, causal=True, block_q=block_q,
+        block_kv=block_kv, interpret=True)

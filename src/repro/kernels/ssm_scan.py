@@ -123,3 +123,19 @@ def ssm_scan_fwd(xv: jax.Array, logdecay: jax.Array, Bmat: jax.Array,
 def _vmem(shape):
     import jax.experimental.pallas.tpu as pltpu
     return pltpu.VMEM(shape, jnp.float32)
+
+
+# kstruct annotation: grid (B, nh, n_chunks); the chunk axis is the
+# sequential scan loop carrying the (hd, st) state scratch
+KSTRUCT_GRID_LOOPS = {2: "chunks"}
+
+
+def kernel_structure(*, chunk: int = 128):
+    """Recover this kernel's interior structure (repro.core.kstruct)."""
+    from repro.core.kstruct import KernelStructure
+    xv = jnp.zeros((1, 2 * chunk, 2, 64), jnp.bfloat16)
+    ld = jnp.zeros((1, 2 * chunk, 2), jnp.float32)
+    Bm = jnp.zeros((1, 2 * chunk, 64), jnp.bfloat16)
+    return KernelStructure.from_function(
+        ssm_scan_fwd, xv, ld, Bm, Bm, name="ssm_scan",
+        grid_loops=KSTRUCT_GRID_LOOPS, chunk=chunk, interpret=True)

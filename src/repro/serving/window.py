@@ -66,6 +66,31 @@ class RequestWindow:
             with prof.dispatch("kernel", "decode_step", ...):
                 ...
         latency_ns = w.duration_ns
+
+    **Continuous batching** (overlapping windows): the ``with`` form
+    splices the window frames for its whole dynamic extent, which
+    assumes the thread works for exactly one request at a time.  A
+    continuous-batching server interleaves decode steps of many live
+    requests on one scheduler thread, so whole-extent splicing would
+    attribute every interleaved dispatch to whichever window opened
+    last (and double-count once both close).  For that shape, keep the
+    window open across the request's lifetime with ``open()``/
+    ``close()`` (span timing only — no frame splicing) and stamp each
+    dispatch explicitly::
+
+        w1, w2 = (RequestWindow(prof, r, phase="decode").open()
+                  for r in ("r1", "r2"))
+        with w1.step():                      # this dispatch is r1's
+            with prof.dispatch(...): ...
+        with w2.step():                      # interleaved: r2's
+            with prof.dispatch(...): ...
+        w1.close(); w2.close()
+
+    ``step()`` uses ``Profiler.window_exclusive``: it *replaces* the
+    thread's window stack for the body, so each dispatch carries exactly
+    one request identity no matter how many windows are live —
+    ``request_attribution`` sums to the partition total with no double
+    counting (pinned in tests/test_serving.py).
     """
 
     def __init__(self, profiler, request_id, phase: Optional[str] = None):
@@ -93,3 +118,25 @@ class RequestWindow:
         self.t1_ns = self.profiler.clock()
         self._cm.__exit__(*exc)
         self._cm = None
+
+    # -- continuous-batching API (overlapping windows) --------------------
+    def open(self) -> "RequestWindow":
+        """Start the request's wall-clock span without splicing frames —
+        safe to hold open concurrently with other requests' windows."""
+        self.t0_ns = self.profiler.clock()
+        return self
+
+    def close(self) -> "RequestWindow":
+        """End the wall-clock span (latency = ``duration_ns``)."""
+        self.t1_ns = self.profiler.clock()
+        return self
+
+    def step(self, phase: Optional[str] = None):
+        """Per-dispatch stamping: a context manager that attributes
+        exactly the dispatches in its body to this request (replacing,
+        not nesting under, any other live window's frames).  ``phase``
+        overrides the window's phase for this step (e.g. a request whose
+        prefill and decode interleave with other requests)."""
+        return self.profiler.window_exclusive(
+            *request_frames(self.request_id,
+                            phase if phase is not None else self.phase))

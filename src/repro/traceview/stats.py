@@ -185,6 +185,76 @@ def top_kernel_counters(lines: Sequence[TraceData], db, *, t0: int, t1: int,
             for g in order if prof[g] > 0]
 
 
+def top_hot_loops(lines: Sequence[TraceData], db, *, t0: Optional[int] = None,
+                  t1: Optional[int] = None, k: int = 10, stat: str = "sum"
+                  ) -> List[Tuple[str, str, str, str, float, float]]:
+    """Kernel-interior hot spots joined with windowed trace time
+    (repro.core.kstruct; the traceview face of ``viewer.top_hot_loops``):
+    rows ``(kernel, loop, file:line, op, samples, est_busy_ns)``.
+
+    Sample stats are whole-run aggregates (PC samples are not
+    time-binned); ``est_busy_ns`` prorates the enclosing GPU placeholder
+    context's busy ns inside [t0, t1) over its interior leaves by sample
+    share — the same whole-run-stats x windowed-busy join as
+    ``top_kernel_counters``."""
+    from repro.core.cct import GPU_FUNC, GPU_LOOP, GPU_OP, PLACEHOLDER
+    try:
+        cols = db.stats[stat]
+        samp = cols[:, db.metric_id("gpu_inst/samples")]
+    except (KeyError, ValueError):
+        return []
+    gpu = [td for td in lines if td.identity.get("type") == "gpu"]
+    if t0 is None:
+        t0 = min((int(td.starts[0]) for td in gpu if len(td.starts)),
+                 default=0)
+    if t1 is None:
+        t1 = max((int(td.ends.max()) for td in gpu if len(td.ends)),
+                 default=t0)
+    prof = interval_profile(gpu, len(db.frames), t0, t1)
+    parents = np.asarray(db.parents, np.int64)
+    kids: Dict[int, List[int]] = {}
+    for gid, par in enumerate(parents):
+        if par >= 0:
+            kids.setdefault(int(par), []).append(gid)
+
+    def subtree_sum(vals: np.ndarray, g: int) -> float:
+        total, stack = 0.0, [g]
+        while stack:
+            i = stack.pop()
+            total += float(vals[i])
+            stack.extend(kids.get(i, []))
+        return total
+
+    roots = [g for g, f in enumerate(db.frames)
+             if f.kind == GPU_FUNC and parents[g] >= 0
+             and db.frames[int(parents[g])].kind == GPU_OP]
+    rows: Dict[tuple, float] = {}
+    busy_of: Dict[tuple, float] = {}
+    for r in roots:
+        kernel = db.frames[r].name
+        p = int(parents[r])
+        while p >= 0 and db.frames[p].kind != PLACEHOLDER:
+            p = int(parents[p])
+        busy = subtree_sum(prof, p) if p >= 0 else 0.0
+        ktotal = samp[r] or 1.0
+        stack = [(c, "-") for c in kids.get(r, [])]
+        while stack:
+            g, loop = stack.pop()
+            f = db.frames[g]
+            if f.kind == GPU_LOOP:
+                loop = f.name
+            if f.kind == GPU_OP:
+                key = (kernel, loop, f"{f.module}:{f.line}", f.name)
+                rows[key] = rows.get(key, 0.0) + float(samp[g])
+                busy_of[key] = busy_of.get(key, 0.0) \
+                    + busy * float(samp[g]) / float(ktotal)
+            stack.extend((c, loop) for c in kids.get(g, []))
+    out = [(kk[0], kk[1], kk[2], kk[3], v, busy_of[kk])
+           for kk, v in rows.items()]
+    out.sort(key=lambda row: (-row[4], row[:4]))
+    return out[:k]
+
+
 # --------------------------------------------------------------------------
 # Idleness / blame over time
 # --------------------------------------------------------------------------

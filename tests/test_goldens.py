@@ -148,3 +148,94 @@ def test_traceview_two_zooms_golden(fixture_db, update_goldens):
     out = render_view(tdb.line_views(), fixture_db, t0=400, t1=900,
                       width=48, height=8, depth=3, top=4)
     check_golden("traceview_render_zoom.txt", out, update_goldens)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-interior hot-loop tables (ISSUE 8; repro.core.kstruct)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def kstruct_db(tmp_path_factory):
+    """Deterministic 2-rank measurement with a kernel-interior descent:
+    the flash kernel's GPU_OP context carries a recovered interior
+    (grid loop -> inlined scopes -> source-line ops) with fixed gpu_inst
+    sample vectors — hand-built timestamps so the traceview join is
+    byte-stable."""
+    from repro.core.cct import GPU_FUNC, GPU_LOOP, GPU_OP
+    tmp = tmp_path_factory.mktemp("kstruct_db")
+    reg = default_registry()
+    kkind = reg.kind("gpu_kernel")
+    ikind = reg.kind("gpu_inst")
+    midx = {m: i for i, m in enumerate(ikind.metrics)}
+
+    def ivec(samples, stall, flops=0.0, nbytes=0.0):
+        v = np.zeros(len(ikind.metrics))
+        v[midx["samples"]] = samples
+        v[midx[f"stall_{stall}"]] = samples
+        v[midx["flops"]], v[midx["bytes"]] = flops, nbytes
+        return v
+
+    paths, traces = [], []
+    for r in range(2):
+        cct = CCT()
+        main = cct.insert_path([Frame(HOST, "main", "app.py", 1)])
+        step = cct.insert_path([Frame(HOST, "step", "app.py", 10)],
+                               parent=main)
+        ph = cct.get_or_insert(step,
+                               Frame(PLACEHOLDER, "kernel:flash", "0", 0))
+        ph.metrics.add(kkind, "invocations", 1)
+        ph.metrics.add(kkind, "time_ns", 500.0)
+        op = cct.get_or_insert(
+            ph, Frame(GPU_OP, "custom-call:fa", "step", 5))
+        root = cct.get_or_insert(
+            op, Frame(GPU_FUNC, "flash_attention", "flash.py", 36))
+        loop = cct.get_or_insert(
+            root, Frame(GPU_LOOP, "grid:kv_blocks", "flash.py", 36))
+        blk = cct.get_or_insert(
+            loop, Frame(GPU_FUNC, "_block", "flash.py", 63))
+        init = cct.get_or_insert(
+            loop, Frame(GPU_FUNC, "_init", "flash.py", 44))
+        cct.get_or_insert(
+            blk, Frame(GPU_OP, "dot_general", "flash.py", 67)) \
+            .metrics.add_vec(ikind, ivec(20 + 4 * r, "compute", 2.1e9))
+        cct.get_or_insert(
+            blk, Frame(GPU_OP, "exp", "flash.py", 80)) \
+            .metrics.add_vec(ikind, ivec(5, "compute", 1.8e8))
+        cct.get_or_insert(
+            init, Frame(GPU_OP, "swap", "flash.py", 47)) \
+            .metrics.add_vec(ikind, ivec(8 + r, "memory", 0.0, 3.3e7))
+        p = str(tmp / f"profile_r{r}_t0.rpro")
+        write_profile(p, cct, reg,
+                      {"rank": r, "thread": 0, "type": "cpu"}, [])
+        paths.append(p)
+        tw = TraceWriter(p.replace(".rpro", ".rtrc"),
+                         {"rank": r, "thread": 0, "type": "cpu"})
+        tw.append(0, 1000, step.node_id)
+        tw.close()
+        traces.append(tw.path)
+        gw = TraceWriter(str(tmp / f"trace_r{r}_s0.rtrc"),
+                         {"rank": r, "stream": 0, "type": "gpu",
+                          "dispatch_profiles":
+                              {"0": f"profile_r{r}_t0.rpro"}})
+        gw.append(200, 700, ph.node_id)
+        gw.close()
+        traces.append(gw.path)
+    return aggregate(paths, str(tmp / "db"), n_ranks=2, n_threads=1,
+                     trace_paths=traces)
+
+
+def test_viewer_top_hot_loops_golden(kstruct_db, update_goldens):
+    from repro.core import viewer
+    out = viewer.top_hot_loops(kstruct_db, top=10)
+    check_golden("viewer_top_hot_loops.txt", out, update_goldens)
+
+
+def test_traceview_top_hot_loops_golden(kstruct_db, update_goldens):
+    from repro.traceview import TraceDB
+    from repro.traceview.stats import top_hot_loops
+    tdb = TraceDB(kstruct_db.trace_db_path())
+    rows = top_hot_loops(tdb.line_views(), kstruct_db, k=10)
+    out = "\n".join(
+        f"{kern:<16} {loop:<14} {line:<12} {op:<12} "
+        f"{samples:7.0f} {busy:12.1f}"
+        for kern, loop, line, op, samples, busy in rows)
+    check_golden("traceview_top_hot_loops.txt", out, update_goldens)

@@ -452,3 +452,93 @@ def test_serving_profiler_status_and_periodic_export(tmp_path):
     assert len(rows) == int(status["epochs_exported"])
     assert [row["epoch"] for row in rows] == \
         sorted(row["epoch"] for row in rows)
+
+
+# ---------------------------------------------------------------------------
+# Overlapping windows (continuous batching): per-dispatch stamping
+# ---------------------------------------------------------------------------
+def test_overlapping_windows_attribute_exactly_once(tmp_path):
+    """Regression (ISSUE 8): a continuous-batching scheduler holds many
+    requests' windows open at once and interleaves their decode steps on
+    one thread.  The whole-extent ``with`` splice would stack both
+    windows (every dispatch lands in both requests — double counted);
+    per-dispatch ``step()`` stamping must attribute each dispatch to
+    exactly one request, so ``request_attribution`` sums exactly to the
+    partition's total GPU busy ns."""
+    from repro.core.profiler import Profiler
+    from repro.serving.window import RequestWindow
+
+    prof = Profiler(str(tmp_path / "run"), tracing=True, unwind=False)
+    w1 = RequestWindow(prof, "r1", DECODE)
+    w2 = RequestWindow(prof, "r2", DECODE)
+    with prof:
+        w1.open()
+        with w1.step(PREFILL):           # r1 prefills alone
+            with prof.dispatch("kernel", "prefill", stream=0):
+                _spin(200_000)
+        w2.open()                        # r2 joins the batch mid-flight
+        for _ in range(3):               # interleaved decode steps
+            with w1.step():
+                with prof.dispatch("kernel", "decode", stream=0):
+                    _spin(100_000)
+            with w2.step():
+                with prof.dispatch("kernel", "decode", stream=0):
+                    _spin(100_000)
+        w1.close()
+        w2.close()
+        prof.flush()
+        paths = prof.write()
+    # both spans overlap (that's the point) and each covers its steps
+    assert w1.duration_ns > w2.duration_ns > 0
+    profs = [p for k, p in sorted(paths.items()) if "trace" not in k]
+    traces = [p for k, p in sorted(paths.items()) if "trace" in k]
+    db = aggregate(profs, str(tmp_path / "db"), n_ranks=1, n_threads=1,
+                   trace_paths=traces)
+    lines = TraceDB(db.trace_db_path()).line_views()
+    gpu = [td for td in lines if td.identity.get("type") == "gpu"]
+    total_gpu_ns = sum(float((td.ends - td.starts).sum()) for td in gpu)
+    assert total_gpu_ns > 0
+    rows = request_attribution(lines, db)
+    assert {r[0] for r in rows} == {"r1", "r2"}
+    by_rid = {r[0]: r for r in rows}
+    # exactly-once: the per-request split partitions the GPU total
+    assert sum(total for _, total, _ in rows) == \
+        pytest.approx(total_gpu_ns, rel=1e-9)
+    # r1 carries the prefill + its decodes; r2 decodes only
+    assert by_rid["r1"][2].get(PREFILL, 0) > 0
+    assert by_rid["r1"][2].get(DECODE, 0) > 0
+    assert set(by_rid["r2"][2]) == {DECODE}
+    # decode work is symmetric across the batch (same spins)
+    assert by_rid["r1"][2][DECODE] == \
+        pytest.approx(by_rid["r2"][2][DECODE], rel=0.5)
+
+
+def test_window_exclusive_replaces_not_nests(tmp_path):
+    """``Profiler.window_exclusive`` swaps the thread's window stack for
+    its body and restores it after — dispatches inside a step carry only
+    that request's frames even under a live ``with``-style window."""
+    from repro.core.profiler import Profiler
+    from repro.serving.window import RequestWindow
+
+    prof = Profiler(str(tmp_path / "run"), tracing=True, unwind=False)
+    with prof:
+        with RequestWindow(prof, "outer", DECODE):
+            w = RequestWindow(prof, "inner", DECODE)
+            with w.step():
+                with prof.dispatch("kernel", "decode", stream=0):
+                    _spin(50_000)
+            # restored: this dispatch belongs to the outer window again
+            with prof.dispatch("kernel", "decode", stream=0):
+                _spin(50_000)
+        prof.flush()
+        paths = prof.write()
+    profs = [p for k, p in sorted(paths.items()) if "trace" not in k]
+    traces = [p for k, p in sorted(paths.items()) if "trace" in k]
+    db = aggregate(profs, str(tmp_path / "db"), n_ranks=1, n_threads=1,
+                   trace_paths=traces)
+    lines = TraceDB(db.trace_db_path()).line_views()
+    rows = {r[0]: r[1] for r in request_attribution(lines, db)}
+    assert set(rows) == {"outer", "inner"}
+    req, _ = window_labels(db)
+    # no context carries both identities (replacement, not nesting)
+    assert all(r in (None, "outer", "inner") for r in req)

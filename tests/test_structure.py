@@ -179,3 +179,64 @@ def test_fusion_cost_attribution():
     # computations (e.g. reduce's `add`) that some jax versions share
     # across call sites (counted once by XLA, per-site by our multiplier)
     assert t["flops_scaled"] == pytest.approx(t["flops_once"], rel=1e-4)
+
+
+# -- collective opcode classification (ISSUE 8 satellite) -----------------
+def _op(opcode):
+    from repro.core.structure import HloOp
+    return HloOp(name="x", opcode=opcode, comp="main", type_str="f32[128]",
+                 out_elems=128, out_bytes=512, operands=("a",))
+
+
+@pytest.mark.parametrize("base", ["all-reduce", "all-gather",
+                                  "reduce-scatter", "all-to-all",
+                                  "collective-permute"])
+@pytest.mark.parametrize("suffix", ["", "-start", "-done"])
+def test_collective_kind_all_spellings(base, suffix):
+    """Regression (ISSUE 8): ``rstrip("-start")`` strips a character
+    *set*, so "reduce-scatter" lost its trailing "r" and every async
+    spelling of it (and of all-to-all/collective-permute, which end in
+    rstrip-set characters too) was misclassified.  Proper suffix
+    handling must recognize every sync/async spelling."""
+    op = _op(base + suffix)
+    assert op.is_collective
+    assert op.collective_kind == base
+
+
+@pytest.mark.parametrize("opcode", ["add", "custom-call", "all-reduce-scat",
+                                    "start", "done", "reduce",
+                                    "scatter", "gather"])
+def test_collective_kind_rejects_non_collectives(opcode):
+    op = _op(opcode)
+    assert not op.is_collective
+    assert op.collective_kind == ""
+
+
+def test_async_collective_start_done_counted_once():
+    """The -start half carries the payload; the -done completion is
+    collective (for stall classification) but contributes no bytes —
+    otherwise every async collective would double-count."""
+    hlo = """HloModule asynccoll
+
+ENTRY %main (x: f32[128]) -> f32[512] {
+  %x = f32[128]{0} parameter(0)
+  %rs = f32[32]{0} reduce-scatter-start(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+  %rsd = f32[32]{0} reduce-scatter-done(%rs)
+  %ag = f32[512]{0} all-gather-start(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %agd = f32[512]{0} all-gather-done(%ag)
+}
+"""
+    mod = parse_hlo(hlo)
+    by_kind = {}
+    for op in mod.collective_ops():
+        by_kind.setdefault(op.collective_kind, []).append(op.opcode)
+    # initiation halves only — one op per kind, no -done double count
+    assert by_kind == {"reduce-scatter": ["reduce-scatter-start"],
+                       "all-gather": ["all-gather-start"]}
+    coll = collective_bytes(mod)
+    assert coll["operand_bytes/reduce-scatter"] == pytest.approx(512)
+    assert coll["operand_bytes/all-gather"] == pytest.approx(512)
+    assert coll["operand_bytes"] == pytest.approx(1024)
+    # the -done ops are still *classified* collective for stall blame
+    dones = [op for op in mod.all_ops() if op.opcode.endswith("-done")]
+    assert len(dones) == 2 and all(op.is_collective for op in dones)
