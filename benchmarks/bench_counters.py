@@ -28,9 +28,14 @@ from repro.core.metrics import GPU_COUNTER_METRICS, default_registry
 from repro.core.profmt import write_profile
 from repro.counters import ALL_COUNTERS, build_schedule, optimal_passes
 
-SCHEDULE_BUDGET_PER_S = 20_000     # schedules/sec
-MERGE_BUDGET_S = 8.0               # 16-profile x 2k-kernel counter merge
-MERGE_BUDGET_S_SMALL = 4.0
+from benchmarks.calibrate import probe
+
+# budgets as multiples of the calibration probe (benchmarks/calibrate.py)
+# — the old absolute bars (20k/s, 8.0 s, 4.0 s) at the seed container's
+# ~0.067 s probe
+SCHEDULE_BUDGET_PER_PROBE = 1_300  # schedules per probe-second
+MERGE_BUDGET_X = 120.0             # 16-profile x 2k-kernel counter merge
+MERGE_BUDGET_X_SMALL = 60.0
 
 
 def bench_schedule(n: int) -> dict:
@@ -48,8 +53,10 @@ def bench_schedule(n: int) -> dict:
         assert len(build_schedule(req).groups) <= optimal_passes(req)
     return {"n_schedules": n, "schedule_s": dt,
             "schedules_per_s": n / dt,
-            "schedule_under_budget": bool(n / dt >= SCHEDULE_BUDGET_PER_S),
-            "schedule_budget_per_s": SCHEDULE_BUDGET_PER_S}
+            "schedule_under_budget": bool(
+                (n / dt) * probe() >= SCHEDULE_BUDGET_PER_PROBE),
+            "schedule_budget_per_probe": SCHEDULE_BUDGET_PER_PROBE,
+            "schedule_budget_probe_s": probe()}
 
 
 def synth_counter_profiles(tmp: str, n_profiles: int, n_kernels: int):
@@ -79,7 +86,7 @@ def synth_counter_profiles(tmp: str, n_profiles: int, n_kernels: int):
     return paths
 
 
-def bench_merge(n_profiles: int, n_kernels: int, budget_s: float) -> dict:
+def bench_merge(n_profiles: int, n_kernels: int, budget_x: float) -> dict:
     tmp = tempfile.mkdtemp(prefix="repro_counters_bench_")
     paths = synth_counter_profiles(tmp, n_profiles, n_kernels)
     t0 = time.perf_counter()
@@ -94,15 +101,16 @@ def bench_merge(n_profiles: int, n_kernels: int, budget_s: float) -> dict:
             "merge_s": merge_s,
             "counter_values_per_s": n_values / merge_s,
             "merge_deterministic": bool(deterministic),
-            "merge_under_budget": bool(merge_s < budget_s),
-            "merge_budget_s": budget_s}
+            "merge_under_budget": bool(merge_s < budget_x * probe()),
+            "merge_budget_x": budget_x,
+            "merge_budget_probe_s": probe()}
 
 
 def main(small: bool = False):
     r = bench_schedule(2_000 if small else 20_000)
     r.update(bench_merge(
         8 if small else 16, 500 if small else 2_000,
-        MERGE_BUDGET_S_SMALL if small else MERGE_BUDGET_S))
+        MERGE_BUDGET_X_SMALL if small else MERGE_BUDGET_X))
     assert r["merge_deterministic"], "counter merge must be bitwise stable"
     for k, v in r.items():
         print(f"bench_counters,{k},{v}")

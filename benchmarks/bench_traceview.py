@@ -2,17 +2,31 @@
 Analysis at Exascale" motivates the merged trace.db).
 
 Synthesizes an 8-rank x 4-stream measurement (1M events by default),
-then measures the two post-mortem stages the subsystem must keep fast:
+then measures the post-mortem stages the subsystem must keep fast:
 
 - **merge**: N per-identity ``.rtrc`` files -> one seekable ``trace.db``
   (events/sec) — the sort-on-read flag is consumed here, once;
+- **pyramid**: building the ``trace.pyr`` tile pyramid from the merged
+  database (repro.traceview.pyramid) — the one-time cost O(tile)
+  zoom/pan buys;
 - **raster**: sampling the merged database into a 200x64 depth-over-time
-  view (pixels/sec) — the acceptance bar is < 1 s for the full view, which
-  only holds if sampling stays O(width log events) per line with no
-  per-event Python loop.
+  view straight from the event arrays — must stay O(width log events)
+  per line with no per-event Python loop;
+- **zoompan**: an interactive session (zoom ladder + pans, raster +
+  occupancy per view) answered twice — per-event re-scan vs pyramid
+  tiles.  The acceptance bar is a >= ``ZOOMPAN_BUDGET_MIN_X`` speedup
+  for the tile path, whose occupancy answers are asserted bitwise-equal
+  to the per-event scan (the exactness contract, docs/traceview.md) and
+  whose wall-clock is additionally held under a calibration-normalized
+  budget;
+- **summary / request_spans**: the tile-backed Summary view (asserted
+  equal to the per-event one) and the vectorized per-request span
+  envelopes over serving window frames.
 
-A small-subset cross-check asserts the vectorized Summary view equals the
-per-event reference ``viewer.trace_statistic`` on the same lines.
+All ``*_under_budget`` gates are ratios against the calibration probe
+(benchmarks/calibrate.py), not absolute wall-clock.  A small-subset
+cross-check asserts the vectorized Summary equals the per-event
+reference ``viewer.trace_statistic``.
 """
 from __future__ import annotations
 
@@ -25,22 +39,49 @@ import numpy as np
 from repro.core.cct import Frame
 from repro.core.trace import TraceWriter
 
-RASTER_BUDGET_S = 1.0      # ISSUE 2 acceptance bar (200x64 @ 1M events)
+from benchmarks.calibrate import probe
+
+# budgets as multiples of the calibration probe (benchmarks/calibrate.py)
+# — RASTER_BUDGET_X is the old absolute 1.0 s ISSUE 2 bar at the seed
+# container's ~0.067 s probe
+RASTER_BUDGET_X = 15.0        # full 200x64 view @ 1M events
+PYRAMID_QUERY_BUDGET_X = 3.0  # the whole tile-backed zoompan session
+ZOOMPAN_BUDGET_MIN_X = 10.0   # tile path vs per-event re-scan (ISSUE 9)
+# at --small (100k events) the per-event scan is cheap enough that the
+# tile path's fixed per-view cost dominates; the speedup bar only has to
+# show the tile path is never slower
+ZOOMPAN_BUDGET_MIN_X_SMALL = 1.2
+
+N_REQUESTS = 16               # serving windows in the synthetic tree
 
 
-def synth_tree(rng, n_ctx: int = 2000, max_depth: int = 8):
-    """Random CCT: parents precede children, depth capped."""
+def synth_tree(rng, n_ctx: int = 2000, max_depth: int = 8,
+               n_requests: int = N_REQUESTS):
+    """Random CCT: parents precede children, depth capped.  The first
+    ``2 * n_requests`` nodes under the root are serving window frames
+    (``request:<id>`` -> ``phase:<p>``, repro.serving.window) so the
+    request-attribution stages group over real labels; the rest of the
+    tree hangs beneath them."""
     parents = np.full(n_ctx, -1, np.int64)
     depth = np.zeros(n_ctx, np.int64)
-    for i in range(1, n_ctx):
-        p = int(rng.integers(0, i))
+    frames = [Frame("root", "<program root>")]
+    for r in range(n_requests):
+        i = 1 + 2 * r
+        parents[i], depth[i] = 0, 1
+        frames.append(Frame("host", f"request:r{r:03d}", "<serving>", 0))
+        parents[i + 1], depth[i + 1] = i, 2
+        frames.append(Frame("host",
+                            "phase:" + ("decode" if r % 2 else "prefill"),
+                            "<serving>", 0))
+    for i in range(1 + 2 * n_requests, n_ctx):
+        p = int(rng.integers(1, i))
         if depth[p] >= max_depth:
             p = int(parents[p])
         parents[i] = p
         depth[i] = depth[p] + 1
-    frames = [Frame("root", "<program root>")] + [
-        Frame("host" if d <= 2 else "placeholder", f"fn{i}", "app.py", int(d))
-        for i, d in enumerate(depth[1:], start=1)]
+        d = depth[i]
+        frames.append(Frame("host" if d <= 2 else "placeholder",
+                            f"fn{i}", "app.py", int(d)))
     return frames, parents
 
 
@@ -75,10 +116,28 @@ def synth_measurement(tmp: str, n_events: int, n_ranks: int = 8,
     return paths, _SynthDB(frames, parents)
 
 
-def run(n_events: int = 1_000_000, width: int = 200, height: int = 64):
+def _zoompan_views(t0: int, t1: int, n_zoom: int = 5, n_pan: int = 5):
+    """The interactive session: zoom in by halves around the center,
+    then pan the deepest zoom across the range."""
+    span = t1 - t0
+    views = []
+    for k in range(n_zoom):
+        w = max(span >> k, 1)
+        a = t0 + span // 2 - w // 2
+        views.append((a, a + w))
+    w = max(span >> (n_zoom - 1), 1)
+    for j in range(n_pan):
+        a = t0 + (span - w) * j // max(n_pan - 1, 1)
+        views.append((a, a + w))
+    return views
+
+
+def run(n_events: int = 1_000_000, width: int = 200, height: int = 64,
+        occ_bins: int = 64, zoompan_min_x: float = ZOOMPAN_BUDGET_MIN_X):
     from repro.core import viewer
     from repro.core.trace import TraceData
-    from repro.traceview import TraceDB, build_db, rasterize, render, summary
+    from repro.traceview import (build_db, build_pyramid, rasterize,
+                                 render, stats, summary)
 
     tmp = tempfile.mkdtemp(prefix="repro_traceview_")
     paths, db = synth_measurement(tmp, n_events)
@@ -88,15 +147,74 @@ def run(n_events: int = 1_000_000, width: int = 200, height: int = 64):
     merge_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()
+    pyr = build_pyramid(tdb.path, db.parents)
+    pyramid_build_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
     lines = tdb.line_views()
     raster = rasterize(lines, db.parents, width=width, height=height,
                        depth=2)
     text = render(raster, db)
     raster_s = time.perf_counter() - t0
 
+    # -- zoompan: the same view sequence answered per-event vs tiles ----
+    # (depths precomputed once for both paths, as an interactive viewer
+    # caches them across renders)
+    from repro.core.cct import tree_depths
+    depths = tree_depths(db.parents)
+    views = _zoompan_views(tdb.t_min, tdb.t_max)
+    # prime both paths once: warms the OS page cache over the event
+    # arrays (per-event path) and the pyramid's per-line cumsum /
+    # refinement-index caches (tile path) — an interactive session pays
+    # those on its first render, not per zoom/pan
+    a, b = views[0]
+    rasterize(lines, db.parents, t0=a, t1=b, width=width, height=height,
+              depth=2, depths=depths)
+    stats.occupancy(lines, a, b, occ_bins)
+    pyr.rasterize(db.parents, t0=a, t1=b, width=width, height=height,
+                  depth=2, depths=depths, mode="auto")
+    pyr.occupancy(a, b, occ_bins)
+    t0 = time.perf_counter()
+    ev_occ = []
+    for a, b in views:
+        rasterize(lines, db.parents, t0=a, t1=b, width=width,
+                  height=height, depth=2, depths=depths)
+        ev_occ.append(stats.occupancy(lines, a, b, occ_bins))
+    zoompan_events_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    tile_occ = []
+    for a, b in views:
+        pyr.rasterize(db.parents, t0=a, t1=b, width=width, height=height,
+                      depth=2, depths=depths, mode="auto")
+        tile_occ.append(pyr.occupancy(a, b, occ_bins))
+    zoompan_tiles_s = time.perf_counter() - t0
+
+    # exactness contract: tile occupancy is bitwise-equal per view, and
+    # an exact-mode tile raster matches the per-event raster pixels
+    for (a, b), eo, to in zip(views, ev_occ, tile_occ):
+        assert np.array_equal(eo, to), f"occupancy diverged on [{a},{b})"
+    a, b = views[len(views) // 2]
+    ref_px = rasterize(lines, db.parents, t0=a, t1=b, width=width,
+                       height=height, depth=2).pixels
+    got_px = pyr.rasterize(db.parents, t0=a, t1=b, width=width,
+                           height=height, depth=2, mode="exact").pixels
+    assert np.array_equal(ref_px, got_px), "exact tile raster diverged"
+
+    # -- summary: per-event vs tile-backed, equal rows ------------------
     t0 = time.perf_counter()
     rows = summary(lines, db, depth=2, top=10)
     summary_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rows_tiles = summary(lines, db, depth=2, top=10, pyramid=pyr)
+    summary_tiles_s = time.perf_counter() - t0
+    assert rows == rows_tiles, "tile-backed summary diverged"
+
+    # -- request spans over the serving window frames -------------------
+    t0 = time.perf_counter()
+    spans = stats.request_spans(lines, db)
+    request_spans_s = time.perf_counter() - t0
+    assert len(spans) > 0, "synthetic tree lost its serving windows"
 
     # cross-check the vectorized Summary against the per-event reference
     # on a 2-line subset (trace_statistic loops in Python)
@@ -109,26 +227,49 @@ def run(n_events: int = 1_000_000, width: int = 200, height: int = 64):
         assert abs(got.get(name, 0.0) - frac) < 1e-12, \
             f"summary mismatch at {name}: {got.get(name)} vs {frac}"
 
+    cal = probe()
     n_pixels = raster.pixels.size
-    return {
+    zoompan_speedup_x = zoompan_events_s / zoompan_tiles_s
+    out = {
         "n_events": tdb.n_events,
         "n_lines": len(tdb.lines),
         "db_bytes": os.path.getsize(tdb.path),
+        "pyr_bytes": os.path.getsize(pyr.path),
         "merge_s": merge_s,
         "merge_events_per_s": tdb.n_events / merge_s,
+        "pyramid_build_s": pyramid_build_s,
         "raster_s": raster_s,
         "raster_pixels": n_pixels,
         "raster_pixels_per_s": n_pixels / raster_s,
-        "raster_under_budget": bool(raster_s < RASTER_BUDGET_S),
-        "raster_budget_s": RASTER_BUDGET_S,
+        "raster_under_budget": bool(raster_s < RASTER_BUDGET_X * cal),
+        "raster_budget_x": RASTER_BUDGET_X,
+        "raster_budget_probe_s": cal,
+        "zoompan_views": len(views),
+        "zoompan_events_s": zoompan_events_s,
+        "zoompan_tiles_s": zoompan_tiles_s,
+        "zoompan_speedup_x": zoompan_speedup_x,
+        "zoompan_under_budget": bool(zoompan_speedup_x >= zoompan_min_x),
+        "zoompan_budget_min_x": zoompan_min_x,
+        "pyramid_query_s": zoompan_tiles_s,
+        "pyramid_query_under_budget": bool(
+            zoompan_tiles_s < PYRAMID_QUERY_BUDGET_X * cal),
+        "pyramid_query_budget_x": PYRAMID_QUERY_BUDGET_X,
         "summary_s": summary_s,
+        "summary_tiles_s": summary_tiles_s,
+        "summary_tiles_equal": True,          # asserted above
+        "request_spans_s": request_spans_s,
+        "request_span_groups": len(spans),
         "summary_matches_trace_statistic": True,
         "render_chars": len(text),
     }
+    pyr.close()
+    tdb.close()
+    return out
 
 
 def main(small: bool = False):
-    r = run(n_events=100_000) if small else run()
+    r = run(n_events=100_000, zoompan_min_x=ZOOMPAN_BUDGET_MIN_X_SMALL) \
+        if small else run()
     for k, v in r.items():
         print(f"bench_traceview,{k},{v}")
     return r

@@ -1,0 +1,54 @@
+"""Machine-speed calibration probe — the reference every benchmark
+budget is expressed against.
+
+Absolute wall-clock budgets (the old ``RASTER_BUDGET_S = 1.0`` and
+siblings) encode the speed of the machine that picked them: a slower CI
+container trips them spuriously, a faster one lets real regressions
+hide.  Every ``<stage>_under_budget`` gate is therefore a **ratio**
+against the probe — ``stage_s < STAGE_BUDGET_X * probe()`` — where the
+probe is a fixed, deterministic numpy workload measured in the same
+process right before the gated stage.  Uniform machine noise inflates
+stage and probe alike, so the ratio is stable across hosts; that is the
+``bench_pipeline`` paired-repeat idea applied across processes.  The
+``--compare`` sweep (benchmarks/run.py) normalizes the same way against
+the ``calibration_s`` recorded in each committed ``BENCH_<name>.json``.
+"""
+from __future__ import annotations
+
+import time
+
+_PROBE_S = None
+
+
+def calibration_probe(repeats: int = 3) -> float:
+    """Seconds for a fixed, deterministic CPU workload (best of
+    ``repeats``).  The mix mirrors what the benchmarks spend time on:
+    medium matmuls, Python-level sorting, and many tiny-array numpy
+    calls (the benches are dominated by numpy call overhead on small
+    arrays, so the probe must be too)."""
+    import numpy as np
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        rng = np.random.default_rng(0)
+        a = rng.standard_normal((256, 256))
+        small = rng.standard_normal(128)
+        acc = 0.0
+        for _ in range(60):
+            a = a @ a.T / 256.0
+            acc += float(np.abs(a).sum())
+            sorted(float(x) for x in a.ravel()[:4096])
+            for _ in range(20):
+                acc += float(np.floor(small * 3.0).sum())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def probe() -> float:
+    """The probe time, measured once per process and cached — every
+    budget gate in a sweep normalizes against the same measurement,
+    and ``benchmarks.run`` records it as ``calibration_s``."""
+    global _PROBE_S
+    if _PROBE_S is None:
+        _PROBE_S = calibration_probe()
+    return _PROBE_S

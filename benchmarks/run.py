@@ -47,33 +47,10 @@ TRACKED = ("aggregation", "channels", "traceview", "counters", "merge",
 COMPARE_TOLERANCE = 0.25
 
 
-def calibration_probe(repeats: int = 3) -> float:
-    """Machine-speed reference: seconds for a fixed, deterministic
-    CPU workload (best of ``repeats``) — the bench_pipeline paired-run
-    idea applied across *processes*: a committed baseline records the
-    probe next to its stage times, so ``--compare`` can gate on the
-    machine-normalized ratio ``stage_s / calibration_s`` instead of
-    absolute wall-clock, which swings +-30% between runs of this 2-core
-    CI container (ROADMAP flagged the old absolute gate as noise-prone).
-    """
-    import numpy as np
-    best = float("inf")
-    for _ in range(max(1, repeats)):
-        t0 = time.perf_counter()
-        rng = np.random.default_rng(0)
-        a = rng.standard_normal((256, 256))
-        small = rng.standard_normal(128)
-        acc = 0.0
-        for _ in range(60):
-            a = a @ a.T / 256.0
-            acc += float(np.abs(a).sum())
-            sorted(float(x) for x in a.ravel()[:4096])
-            # tiny-array ops: the benchmarks are dominated by numpy
-            # call overhead on small arrays, so the probe must be too
-            for _ in range(20):
-                acc += float(np.floor(small * 3.0).sum())
-        best = min(best, time.perf_counter() - t0)
-    return best
+# the probe lives in benchmarks.calibrate (every bench's budget gate
+# normalizes against it in-process); re-exported here for the sweep and
+# for existing importers
+from benchmarks.calibrate import calibration_probe, probe  # noqa: F401,E402
 
 
 def budget_regressions(name: str, results: dict) -> list:
@@ -166,7 +143,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
     failures = 0
     regressions = []
-    cal = calibration_probe()
+    cal = probe()
     print(f"# calibration probe: {cal:.3f}s", flush=True)
     for name, mod in ALL.items():
         if args.only and name != args.only:

@@ -53,6 +53,7 @@ def aggregate(profile_paths: Sequence[str], out_dir: str, *,
               structures: Optional[Dict[str, HloModule]] = None,
               trace_paths: Sequence[str] = (),
               trace_db: bool = True,
+              trace_pyramid: bool = False,
               base_db: "Optional[str | Database]" = None,
               timing: Optional[dict] = None,
               workers: Optional[int] = None,
@@ -74,24 +75,35 @@ def aggregate(profile_paths: Sequence[str], out_dir: str, *,
       applied at merge time: epochs beyond the window are retired,
       duplicates compacted, and the result is byte-identical to
       re-aggregating the surviving profile set.
+    - ``trace_pyramid=True`` also builds the ``trace.pyr`` tile pyramid
+      next to ``trace.db`` during phase 5 (repro.traceview.pyramid) —
+      the opt-in alternative to the lazy ``ensure_pyramid`` cache.
     """
     if base_db is not None:
-        return _aggregate_incremental(
+        db = _aggregate_incremental(
             profile_paths, out_dir, base_db, n_ranks=n_ranks,
             n_threads=n_threads, structures=structures,
             trace_paths=trace_paths, trace_db=trace_db, timing=timing,
             workers=workers, driver=driver, retention=retention)
-    if retention is not None and not retention.is_noop:
-        return _aggregate_retained(
+    elif retention is not None and not retention.is_noop:
+        db = _aggregate_retained(
             profile_paths, out_dir, retention, n_ranks=n_ranks,
             n_threads=n_threads, structures=structures,
             trace_paths=trace_paths, trace_db=trace_db, timing=timing,
             workers=workers, driver=driver)
-    from repro.core.pipeline import driver as _driver
-    return _driver.run(profile_paths, out_dir, n_ranks=n_ranks,
-                       n_threads=n_threads, structures=structures,
-                       trace_paths=trace_paths, trace_db=trace_db,
-                       timing=timing, workers=workers, driver=driver)
+    else:
+        from repro.core.pipeline import driver as _driver
+        return _driver.run(profile_paths, out_dir, n_ranks=n_ranks,
+                           n_threads=n_threads, structures=structures,
+                           trace_paths=trace_paths, trace_db=trace_db,
+                           trace_pyramid=trace_pyramid, timing=timing,
+                           workers=workers, driver=driver)
+    # merged paths (incremental/retained) rebuild trace.db during the
+    # fold; refresh the pyramid from the final bytes
+    if trace_pyramid and os.path.exists(db.trace_db_path()):
+        from repro.traceview.pyramid import ensure_pyramid
+        ensure_pyramid(db).close()
+    return db
 
 
 def _aggregate_incremental(profile_paths: Sequence[str], out_dir: str,

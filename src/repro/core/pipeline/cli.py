@@ -46,6 +46,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "'last=2,max=64,dedup' (repro.core.retention)")
     ap.add_argument("--no-trace-db", action="store_true",
                     help="skip building the merged trace.db")
+    ap.add_argument("--trace-pyramid", action="store_true",
+                    help="also build the trace.pyr tile pyramid next to "
+                         "trace.db (O(tile) zoom/pan; docs/traceview.md)")
     args = ap.parse_args(argv)
 
     from repro.core.aggregate import aggregate
@@ -56,6 +59,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     db = aggregate(
         profiles, args.out, n_ranks=args.ranks, n_threads=args.threads,
         trace_paths=traces, trace_db=not args.no_trace_db,
+        trace_pyramid=args.trace_pyramid,
         base_db=args.base, workers=args.workers, driver=args.driver,
         retention=parse_retention(args.retain) if args.retain else None)
     print(f"AGGREGATE  {len(profiles)} profile(s), {len(traces)} "

@@ -77,7 +77,7 @@ def resolve_driver(driver: Optional[str],
 def run_serial(profile_paths: Sequence[str], out_dir: str, *,
                n_ranks: int = 4, n_threads: int = 4,
                structures=None, trace_paths: Sequence[str] = (),
-               trace_db: bool = True,
+               trace_db: bool = True, trace_pyramid: bool = False,
                timing: Optional[dict] = None) -> Database:
     os.makedirs(out_dir, exist_ok=True)
     t0 = time.monotonic()
@@ -96,7 +96,8 @@ def run_serial(profile_paths: Sequence[str], out_dir: str, *,
     gmaps = {up.path: up.gmap for up in uni.profiles}
     converted = convert_traces(trace_paths, gmaps, out_dir)
     if converted and trace_db:
-        build_trace_db(converted, out_dir)
+        build_trace_db(converted, out_dir, pyramid=trace_pyramid,
+                       parents=uni.parents)
 
     db = write_database(out_dir, uni.frames, uni.parents, uni.metrics,
                         entries, n_workers=n_ranks * n_threads,
@@ -205,6 +206,7 @@ def _execute_shards(driver: str, workers: int,
 def run(profile_paths: Sequence[str], out_dir: str, *,
         n_ranks: int = 4, n_threads: int = 4, structures=None,
         trace_paths: Sequence[str] = (), trace_db: bool = True,
+        trace_pyramid: bool = False,
         timing: Optional[dict] = None, workers: Optional[int] = None,
         driver: Optional[str] = None) -> Database:
     """Aggregate ``profile_paths`` into ``out_dir`` under the selected
@@ -216,7 +218,8 @@ def run(profile_paths: Sequence[str], out_dir: str, *,
     trace_paths = list(trace_paths)
     serial_kw = dict(n_ranks=n_ranks, n_threads=n_threads,
                      structures=structures, trace_paths=trace_paths,
-                     trace_db=trace_db, timing=timing)
+                     trace_db=trace_db, trace_pyramid=trace_pyramid,
+                     timing=timing)
     if driver == "serial" or workers <= 1 or len(profile_paths) < 2:
         return run_serial(profile_paths, out_dir, **serial_kw)
 
@@ -244,7 +247,8 @@ def run(profile_paths: Sequence[str], out_dir: str, *,
             gmaps[path] = remap[g]
     converted = convert_traces(trace_paths, gmaps, out_dir)
     if converted and trace_db:
-        build_trace_db(converted, out_dir)
+        build_trace_db(converted, out_dir, pyramid=trace_pyramid,
+                       parents=db.parents)
 
     if timing is not None:
         _load_timing(out_dir, timing)

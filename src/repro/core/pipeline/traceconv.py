@@ -137,9 +137,22 @@ def convert_traces(trace_paths: Sequence[str],
     return converted
 
 
-def build_trace_db(converted: Sequence[str], out_dir: str) -> None:
+def build_trace_db(converted: Sequence[str], out_dir: str, *,
+                   pyramid: bool = False, parents=None) -> None:
     """Post-mortem merge into the seekable trace.db (traceview, §4.4):
     the converted traces already carry global ctx ids, so the merged
-    database is directly renderable against the Database."""
+    database is directly renderable against the Database.
+
+    ``pyramid=True`` also builds the ``trace.pyr`` tile pyramid
+    (repro.traceview.pyramid) from the fresh trace.db and the final CCT
+    ``parents`` — the opt-in phase-5 variant of the lazy
+    ``ensure_pyramid`` cache."""
     from repro.traceview.tracedb import build_db
-    build_db(list(converted), os.path.join(out_dir, "trace.db"))
+    db_path = os.path.join(out_dir, "trace.db")
+    with build_db(list(converted), db_path):
+        pass
+    if pyramid:
+        if parents is None:
+            raise ValueError("trace pyramid build requires the CCT parents")
+        from repro.traceview.pyramid import build_pyramid
+        build_pyramid(db_path, parents).close()

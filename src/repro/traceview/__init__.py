@@ -9,8 +9,10 @@ Typical post-mortem flow::
     print(render_view(tdb.line_views(), db, width=120, height=16, depth=2))
 """
 from repro.traceview.filter import TraceFilter, apply_filter, subtree_mask
+from repro.traceview.pyramid import (TracePyramid, build_pyramid,
+                                     ensure_pyramid, pyramid_path_for)
 from repro.traceview.raster import (IDLE, Raster, ancestors_at_depth,
-                                    rasterize, tree_depths)
+                                    rasterize, sample_line, tree_depths)
 from repro.traceview.render import (depth_selector, render, render_view,
                                     statistic_panel)
 from repro.traceview.stats import (blame_over_time, interval_profile,
@@ -21,7 +23,9 @@ from repro.traceview.tracedb import TraceDB, build_db
 
 __all__ = [
     "TraceDB", "build_db",
-    "Raster", "rasterize", "ancestors_at_depth", "tree_depths", "IDLE",
+    "TracePyramid", "build_pyramid", "ensure_pyramid", "pyramid_path_for",
+    "Raster", "rasterize", "sample_line", "ancestors_at_depth",
+    "tree_depths", "IDLE",
     "render", "render_view", "depth_selector", "statistic_panel",
     "summary", "interval_profile", "occupancy", "top_kernels",
     "top_kernel_counters",

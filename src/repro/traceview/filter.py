@@ -55,7 +55,12 @@ def apply_filter(lines: Sequence[TraceData], flt: TraceFilter,
                  parents: Optional[np.ndarray] = None) -> List[TraceData]:
     """Filtered per-line TraceData views.  Lines failing the identity
     predicates are dropped; events outside the window or subtree are
-    masked out (a subtree filter needs ``parents``)."""
+    masked out (a subtree filter needs ``parents``), and events
+    straddling a window edge are *clipped* to [t0, t1) — so a
+    downstream default-window ``summary``/``rasterize`` stays inside
+    the filter window instead of expanding over a straddler's full
+    extent (the pre-clip behavior silently counted out-of-window time).
+    """
     keep_ctx = None
     if flt.subtree is not None:
         if parents is None:
@@ -76,9 +81,14 @@ def apply_filter(lines: Sequence[TraceData], flt: TraceFilter,
         if keep_ctx is not None:
             valid = (ctx >= 0) & (ctx < len(keep_ctx))
             sel &= valid & keep_ctx[np.clip(ctx, 0, len(keep_ctx) - 1)]
-        if sel.all():
+        clip_lo = flt.t0 if flt.t0 is not None else np.iinfo(np.int64).min
+        clip_hi = flt.t1 if flt.t1 is not None else np.iinfo(np.int64).max
+        if sel.all() and (not len(starts) or (
+                starts.min() >= clip_lo and ends.max() <= clip_hi)):
             out.append(td)
         else:
-            out.append(TraceData(td.identity, starts[sel], ends[sel],
+            out.append(TraceData(td.identity,
+                                 np.clip(starts[sel], clip_lo, clip_hi),
+                                 np.clip(ends[sel], clip_lo, clip_hi),
                                  ctx[sel]))
     return out

@@ -22,9 +22,47 @@ from repro.core.cct import tree_depths
 from repro.core.trace import TraceData
 
 __all__ = ["IDLE", "Raster", "ancestors_at_depth", "line_label",
-           "rasterize", "tree_depths"]
+           "rasterize", "sample_line", "tree_depths"]
 
 IDLE = -1    # pixel value for "no event under this sample"
+
+
+def sample_line(starts: np.ndarray, ends: np.ndarray, ctx: np.ndarray,
+                samples: np.ndarray, *, emax: Optional[np.ndarray] = None,
+                nested: Optional[bool] = None) -> np.ndarray:
+    """Context id covering each sample midpoint (``IDLE`` where none) —
+    the per-line sampling core shared by the per-event raster and the
+    pyramid's exact mode.  ``emax`` (running max of ends) and ``nested``
+    (whether any event overlaps an earlier one) are recomputed here when
+    absent; the pyramid passes its stored copies so an exact re-render
+    costs O(W log E) instead of O(E)."""
+    starts = np.asarray(starts, np.int64)
+    out = np.full(len(samples), IDLE, np.int64)
+    if not len(starts):
+        return out
+    ends = np.asarray(ends, np.int64)
+    cur = np.searchsorted(starts, samples, side="right") - 1
+    if emax is None:
+        emax = np.maximum.accumulate(ends)
+    if nested is None:
+        nested = len(starts) > 1 and bool((starts[1:] < emax[:-1]).any())
+    if nested:
+        # nested/overlapping events: when the latest-starting event has
+        # ended, walk back to the latest-starting one still covering
+        # the sample (the enclosing scope).  emax bounds the walk: no
+        # cover exists once samples >= max end of all earlier events.
+        while True:
+            safe = np.maximum(cur, 0)
+            need = (cur >= 0) & (samples >= ends[safe]) \
+                & (samples < emax[safe])
+            if not need.any():
+                break
+            cur[need] -= 1
+    safe = np.maximum(cur, 0)
+    covered = (cur >= 0) & (samples < ends[safe])
+    gids = np.asarray(ctx, np.int64)[safe]
+    out[covered] = gids[covered]
+    return out
 
 
 def ancestors_at_depth(parents: np.ndarray, depths: np.ndarray,
@@ -83,7 +121,8 @@ def rasterize(lines: Sequence[TraceData], parents: np.ndarray, *,
     """
     parents = np.asarray(parents, np.int64)
     if t0 is None:
-        t0 = min((int(td.starts[0]) for td in lines if len(td.starts)),
+        # min, not starts[0]: pre-merge TraceData lines may be unsorted
+        t0 = min((int(np.min(td.starts)) for td in lines if len(td.starts)),
                  default=0)
     if t1 is None:
         t1 = max((int(td.ends.max()) for td in lines if len(td.ends)),
@@ -99,28 +138,10 @@ def rasterize(lines: Sequence[TraceData], parents: np.ndarray, *,
     pixels = np.full((len(rows), width), IDLE, np.int64)
     for out_row, li in enumerate(rows):
         td = lines[li]
-        starts = np.asarray(td.starts, np.int64)
-        if not len(starts):
+        if not len(td.starts):
             continue
-        ends = np.asarray(td.ends, np.int64)
-        cur = np.searchsorted(starts, samples, side="right") - 1
-        emax = np.maximum.accumulate(ends)
-        if len(starts) > 1 and bool((starts[1:] < emax[:-1]).any()):
-            # nested/overlapping events: when the latest-starting event has
-            # ended, walk back to the latest-starting one still covering
-            # the sample (the enclosing scope).  emax bounds the walk: no
-            # cover exists once samples >= max end of all earlier events.
-            while True:
-                safe = np.maximum(cur, 0)
-                need = (cur >= 0) & (samples >= ends[safe]) \
-                    & (samples < emax[safe])
-                if not need.any():
-                    break
-                cur[need] -= 1
-        safe = np.maximum(cur, 0)
-        covered = (cur >= 0) & (samples < ends[safe])
-        gids = np.asarray(td.ctx, np.int64)[safe]
-        valid = covered & (gids >= 0) & (gids < len(parents))
+        gids = sample_line(td.starts, td.ends, td.ctx, samples)
+        valid = (gids >= 0) & (gids < len(parents))
         pixels[out_row, valid] = anc[gids[valid]]
     return Raster(pixels, samples, [line_label(lines[i].identity)
                                     for i in rows],

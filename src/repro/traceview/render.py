@@ -72,19 +72,31 @@ def statistic_panel(rows: Sequence[Tuple[str, float]],
 def render_view(lines: Sequence[TraceData], db, *,
                 t0: Optional[int] = None, t1: Optional[int] = None,
                 width: int = 120, height: int = 32, depth: int = 2,
-                top: int = 8, max_depth: Optional[int] = None) -> str:
+                top: int = 8, max_depth: Optional[int] = None,
+                pyramid=None, mode: str = "auto") -> str:
     """One-stop view: depth selector + raster + Statistic panel, the text
-    analogue of one hpctraceviewer screen."""
+    analogue of one hpctraceviewer screen.
+
+    With ``pyramid`` (a ``pyramid.TracePyramid``), both the raster and
+    the Summary rows come from the tiles — O(tiles-touched) per
+    zoom/pan instead of O(events) — and ``lines`` is ignored (pass
+    None).  ``mode`` selects the raster estimator (``auto`` / ``exact``
+    / ``dominant``, see ``TracePyramid.rasterize``)."""
     from repro.traceview.raster import tree_depths
     from repro.traceview.stats import summary
     depths = db.depths() if hasattr(db, "depths") else \
         tree_depths(np.asarray(db.parents, np.int64))
-    raster = rasterize(lines, db.parents, t0=t0, t1=t1, width=width,
-                       height=height, depth=depth, depths=depths)
+    if pyramid is not None:
+        raster = pyramid.rasterize(db.parents, t0=t0, t1=t1, width=width,
+                                   height=height, depth=depth,
+                                   depths=depths, mode=mode)
+    else:
+        raster = rasterize(lines, db.parents, t0=t0, t1=t1, width=width,
+                           height=height, depth=depth, depths=depths)
     if max_depth is None:
         max_depth = int(depths.max()) if len(depths) else 0
     rows = summary(lines, db, t0=raster.t0, t1=raster.t1, depth=depth,
-                   top=top, depths=depths)
+                   top=top, depths=depths, pyramid=pyramid)
     return "\n".join([depth_selector(max_depth, depth),
                       render(raster, db),
                       statistic_panel(rows, title="Statistic (Summary)")])

@@ -68,9 +68,17 @@ def coverage_at(m_start: np.ndarray, m_end: np.ndarray,
 
 
 def occupancy(lines: Sequence[TraceData], t0: int, t1: int,
-              nbins: int) -> np.ndarray:
+              nbins: int, *, pyramid=None,
+              line_ids: Optional[Sequence[int]] = None) -> np.ndarray:
     """(n_lines, nbins) busy ns per bin.  Busy time is the *union* of the
-    line's events, so for any line busy + idle == t1 - t0 exactly."""
+    line's events, so for any line busy + idle == t1 - t0 exactly.
+
+    With ``pyramid`` (a ``pyramid.TracePyramid``), bin sums come from the
+    precomputed busy-ns tiles — bitwise-equal (docs/traceview.md) but
+    O(tiles) instead of O(events); ``line_ids`` selects pyramid lines
+    (all when None) and ``lines`` is ignored."""
+    if pyramid is not None:
+        return pyramid.occupancy(t0, t1, nbins, lines=line_ids)
     edges = int(t0) + (int(t1) - int(t0)) \
         * np.arange(nbins + 1, dtype=np.int64) // nbins
     out = np.zeros((len(lines), nbins), np.float64)
@@ -116,18 +124,40 @@ def interval_profile(lines: Sequence[TraceData], n_ctx: int,
 
 def summary(lines: Sequence[TraceData], db, *, t0: Optional[int] = None,
             t1: Optional[int] = None, depth: int = 2, top: int = 10,
-            depths: Optional[np.ndarray] = None) -> List[Tuple[str, float]]:
+            depths: Optional[np.ndarray] = None, pyramid=None,
+            flt=None) -> List[Tuple[str, float]]:
     """The Summary tab: fraction of window trace-area per routine at the
     given depth.  With the full window this matches
-    ``viewer.trace_statistic`` on the same lines."""
-    if t0 is None:
-        t0 = min((int(td.starts[0]) for td in lines if len(td.starts)),
-                 default=0)
-    if t1 is None:
-        t1 = max((int(td.ends.max()) for td in lines if len(td.ends)),
-                 default=t0)
-    prof = interval_profile(lines, len(db.frames), t0, t1)
+    ``viewer.trace_statistic`` on the same lines.
+
+    With ``pyramid`` (a ``pyramid.TracePyramid``), the profile comes from
+    the context tiles — bitwise-equal to the per-event path on the same
+    window (docs/traceview.md) — and ``lines`` is ignored (pass None).
+    ``flt`` (a ``filter.TraceFilter``) composes at the tile level: line
+    predicates prune whole lines, the subtree mask prunes tile entries,
+    and the default window is the selected lines' extent intersected
+    with the filter window."""
     parents = np.asarray(db.parents, np.int64)
+    if pyramid is not None:
+        line_ids, ctx_mask, ft0, ft1 = pyramid.select(flt, parents)
+        d0, d1 = pyramid.line_range(line_ids)
+        t0 = d0 if t0 is None else t0
+        t1 = d1 if t1 is None else t1
+        if ft0 is not None:
+            t0 = max(t0, ft0)
+        if ft1 is not None:
+            t1 = min(t1, ft1)
+        prof = pyramid.interval_profile(len(db.frames), t0, t1,
+                                        lines=line_ids, ctx_mask=ctx_mask)
+    else:
+        if t0 is None:
+            # min, not starts[0]: pre-merge lines may be unsorted
+            t0 = min((int(np.min(td.starts)) for td in lines
+                      if len(td.starts)), default=0)
+        if t1 is None:
+            t1 = max((int(td.ends.max()) for td in lines if len(td.ends)),
+                     default=t0)
+        prof = interval_profile(lines, len(db.frames), t0, t1)
     if depths is None:   # aggregate.Database caches its depth array
         depths = db.depths() if hasattr(db, "depths") else \
             tree_depths(parents)
@@ -205,7 +235,8 @@ def top_hot_loops(lines: Sequence[TraceData], db, *, t0: Optional[int] = None,
         return []
     gpu = [td for td in lines if td.identity.get("type") == "gpu"]
     if t0 is None:
-        t0 = min((int(td.starts[0]) for td in gpu if len(td.starts)),
+        # min, not starts[0]: pre-merge lines may be unsorted
+        t0 = min((int(np.min(td.starts)) for td in gpu if len(td.starts)),
                  default=0)
     if t1 is None:
         t1 = max((int(td.ends.max()) for td in gpu if len(td.ends)),
@@ -276,7 +307,7 @@ def split_by_rank(lines: Sequence[TraceData]
 
 
 def blame_over_time(lines: Sequence[TraceData], t0: int, t1: int,
-                    nbins: int) -> Dict[int, dict]:
+                    nbins: int, *, pyramid=None) -> Dict[int, dict]:
     """Per rank: ``streams_idle_frac`` (nbins,) — 1 - mean busy fraction
     of the rank's GPU streams per bin; ``idle_ns`` (nbins,) — all-streams
     -idle time per bin; ``blame`` {cpu ctx: (nbins,) ns} — idle time split
@@ -284,6 +315,11 @@ def blame_over_time(lines: Sequence[TraceData], t0: int, t1: int,
     each idle segment spans.  Summing ``blame`` over bins reproduces
     ``core.blame.blame_gpu_idleness`` on the same (clipped) lines.
     Ranks with no GPU lines are omitted (no streams to be idle).
+
+    With ``pyramid``, the per-stream busy sums come from the busy-ns
+    tiles (bitwise-equal); the idle-segment blame split still walks the
+    window's clipped events — it needs the set of CPU contexts active
+    during each segment, which no additive tile carries.
     """
     edges = t0 + (t1 - t0) * np.arange(nbins + 1, dtype=np.int64) // nbins
     out: Dict[int, dict] = {}
@@ -296,7 +332,10 @@ def blame_over_time(lines: Sequence[TraceData], t0: int, t1: int,
             # no streams -> "fraction of streams idle" is undefined, and
             # blaming the rank's whole CPU runtime would be wrong
             continue
-        busy = occupancy(gpu, t0, t1, nbins)
+        ids = [pyramid.line_index(td.identity) for td in gpu] \
+            if pyramid is not None else None
+        busy = occupancy(gpu, t0, t1, nbins, pyramid=pyramid,
+                         line_ids=ids)
         widths = np.diff(edges).astype(np.float64)
         frac = 1.0 - busy.sum(0) / np.maximum(widths * max(len(gpu), 1), 1)
         idle_ns = np.zeros(nbins)
@@ -376,7 +415,8 @@ def request_attribution(lines: Sequence[TraceData], db, *,
     sel = [td for td in lines
            if not gpu_only or td.identity.get("type") == "gpu"]
     if t0 is None:
-        t0 = min((int(td.starts[0]) for td in sel if len(td.starts)),
+        # min, not starts[0]: pre-merge lines may be unsorted
+        t0 = min((int(np.min(td.starts)) for td in sel if len(td.starts)),
                  default=0)
     if t1 is None:
         t1 = max((int(td.ends.max()) for td in sel if len(td.ends)),
@@ -410,14 +450,23 @@ def request_spans(lines: Sequence[TraceData], db
         starts = np.asarray(td.starts, np.int64)
         ends = np.asarray(td.ends, np.int64)
         valid = (ctx >= 0) & (ctx < len(req))
-        for g in np.unique(ctx[valid]):
-            r = req[g]
+        ctx_v = ctx[valid]
+        if not len(ctx_v):
+            continue
+        # one group-reduce per line (argsort + reduceat) instead of the
+        # old per-unique-ctx re-scan, which was O(unique x events)
+        order = np.argsort(ctx_v, kind="stable")
+        cs = ctx_v[order]
+        grp = np.flatnonzero(np.concatenate(([True], cs[1:] != cs[:-1])))
+        gmin = np.minimum.reduceat(starts[valid][order], grp)
+        gmax = np.maximum.reduceat(ends[valid][order], grp)
+        for g, s0, e1 in zip(cs[grp], gmin, gmax):
+            r = req[int(g)]
             if r is None:
                 continue
-            key = (r, ph[g] or "other")
-            on = ctx == g
-            s0, e1 = int(starts[on].min()), int(ends[on].max())
+            key = (r, ph[int(g)] or "other")
             cur = spans.get(key)
+            s0, e1 = int(s0), int(e1)
             spans[key] = ((min(cur[0], s0), max(cur[1], e1)) if cur
                           else (s0, e1))
     return spans

@@ -95,9 +95,10 @@ def _load_sources(sources: Union[Source, Sequence[Source]]
         else:
             # materialize: line_views are zero-copy views into the mapped
             # file, which build_db may be about to overwrite in place
-            lines.extend(TraceData(td.identity, np.array(td.starts),
-                                   np.array(td.ends), np.array(td.ctx))
-                         for td in TraceDB(src).line_views())
+            with TraceDB(src) as db:
+                lines.extend(TraceData(td.identity, np.array(td.starts),
+                                       np.array(td.ends), np.array(td.ctx))
+                             for td in db.line_views())
     return lines
 
 
@@ -144,7 +145,13 @@ class TraceLine:
 class TraceDB:
     """Memory-mapped reader.  ``starts/ends/ctx(i)`` are zero-copy slices
     of the mapped data region; ``view(i)`` wraps them as the same
-    ``TraceData`` the pre-merge tools (blame, viewer) consume."""
+    ``TraceData`` the pre-merge tools (blame, viewer) consume.
+
+    Context manager: ``close()`` releases the mapping, so tools that
+    scan many databases (the fleet daemon, pyramid builds) don't
+    accumulate open file mappings; re-merging a database in place is
+    safe once its readers are closed.  Accessors raise ``ValueError``
+    after close."""
 
     def __init__(self, path: str):
         self.path = path
@@ -166,20 +173,47 @@ class TraceDB:
                                shape=(3 * self.n_events,)) \
             if self.n_events else np.zeros(0, np.int64)
 
+    def close(self) -> None:
+        data, self._data = self._data, None
+        if isinstance(data, np.memmap):
+            data._mmap.close()
+
+    def __enter__(self) -> "TraceDB":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     def __len__(self) -> int:
         return len(self.lines)
 
+    def _slice(self, lo: int, hi: int) -> np.ndarray:
+        if self._data is None:
+            raise ValueError(f"{self.path}: trace.db reader is closed")
+        return self._data[lo:hi]
+
+    def raw(self) -> np.ndarray:
+        """The whole mapped int64 data region — every line's
+        ``starts|ends|ctx`` blocks concatenated, addressed via
+        ``lines[i].offset``.  The pyramid's batched occupancy gathers
+        candidate events of many (line, edge) pairs in one fancy index
+        instead of a per-line slice loop."""
+        if self._data is None:
+            raise ValueError(f"{self.path}: trace.db reader is closed")
+        return self._data
+
     def starts(self, i: int) -> np.ndarray:
         ln = self.lines[i]
-        return self._data[ln.offset:ln.offset + ln.count]
+        return self._slice(ln.offset, ln.offset + ln.count)
 
     def ends(self, i: int) -> np.ndarray:
         ln = self.lines[i]
-        return self._data[ln.offset + ln.count:ln.offset + 2 * ln.count]
+        return self._slice(ln.offset + ln.count, ln.offset + 2 * ln.count)
 
     def ctx(self, i: int) -> np.ndarray:
         ln = self.lines[i]
-        return self._data[ln.offset + 2 * ln.count:ln.offset + 3 * ln.count]
+        return self._slice(ln.offset + 2 * ln.count,
+                           ln.offset + 3 * ln.count)
 
     def view(self, i: int) -> TraceData:
         return TraceData(self.lines[i].identity, self.starts(i),

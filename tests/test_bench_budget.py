@@ -44,14 +44,30 @@ def test_counters_benchmark_is_tracked():
 
 def test_merge_benchmark_is_tracked_with_budget():
     """ISSUE 4: bench_merge rides the sweep (and --small smoke in CI),
-    persists BENCH_merge.json, and enforces its merge-stage budget."""
+    persists BENCH_merge.json, and enforces its merge-stage budget —
+    since ISSUE 9 a calibration-probe ratio, not absolute seconds."""
     from benchmarks import bench_merge
     assert "merge" in ALL and "merge" in TRACKED
-    assert bench_merge.MERGE_BUDGET_S > 0
+    assert bench_merge.MERGE_BUDGET_X > 0
     msgs = budget_regressions("merge", {
         "merge_under_budget": False,
-        "merge_budget_s": bench_merge.MERGE_BUDGET_S})
+        "merge_budget_x": bench_merge.MERGE_BUDGET_X})
     assert len(msgs) == 1 and "merge" in msgs[0]
+
+
+def test_traceview_zoompan_budget_is_probe_ratio():
+    """ISSUE 9: the traceview gates are calibration-probe ratios, and
+    the pyramid's interactive bar is a >=10x speedup over the per-event
+    re-scan at full size."""
+    from benchmarks import bench_traceview
+    assert "traceview" in ALL and "traceview" in TRACKED
+    assert bench_traceview.ZOOMPAN_BUDGET_MIN_X >= 10.0
+    assert bench_traceview.RASTER_BUDGET_X > 0
+    assert bench_traceview.PYRAMID_QUERY_BUDGET_X > 0
+    msgs = budget_regressions("traceview", {
+        "zoompan_under_budget": False,
+        "zoompan_budget_min_x": bench_traceview.ZOOMPAN_BUDGET_MIN_X})
+    assert len(msgs) == 1 and "zoompan" in msgs[0]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,406 @@
+"""Trace tile pyramid (ISSUE 9): build determinism, the exactness
+contract (tile-backed queries bitwise-equal to per-event answers),
+filter composition, cache staleness, reader lifecycle — plus the
+window-correctness regression sweep that rode along (unsorted-line
+default windows, filter edge clipping, vectorized request spans)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.cct import (GPU_FUNC, GPU_LOOP, GPU_OP, HOST, PLACEHOLDER,
+                            Frame, tree_depths)
+from repro.core.trace import TraceData
+from repro.traceview import (TraceDB, TraceFilter, TracePyramid,
+                             apply_filter, build_db, build_pyramid,
+                             ensure_pyramid, pyramid_path_for, rasterize,
+                             stats, summary)
+from repro.traceview.pyramid import _db_header_sha
+
+from tests.test_traceview import SynthDB
+
+
+# ---------------------------------------------------------------------------
+# fixture: 4 lines x 500 events, random tree, out-of-range ctx included
+# ---------------------------------------------------------------------------
+N_CTX = 50
+
+
+def _synth_lines(rng, n_lines=4, n_events=500):
+    srcs = []
+    for r in range(n_lines):
+        ss, ee, cc = [], [], []
+        t = 1000 + r * 17
+        for _ in range(n_events):
+            t += int(rng.integers(0, 300))
+            d = int(rng.integers(1, 500))
+            ss.append(t)
+            ee.append(t + d)
+            # includes out-of-range ctx: attributes to root like the
+            # per-event paths
+            cc.append(int(rng.integers(-7, N_CTX + 3)))
+            if rng.random() < 0.7:       # else: overlapping/nested events
+                t += d
+        srcs.append(TraceData({"rank": r, "thread": 0, "type": "cpu"},
+                              np.asarray(ss, np.int64),
+                              np.asarray(ee, np.int64),
+                              np.asarray(cc, np.int64)))
+    return srcs
+
+
+@pytest.fixture(scope="module")
+def pyrdb(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("pyr")
+    rng = np.random.default_rng(42)
+    parents = np.full(N_CTX, -1, np.int64)
+    frames = [Frame("root", "<program root>")]
+    for i in range(1, N_CTX):
+        parents[i] = rng.integers(0, i)
+        frames.append(Frame(HOST, f"fn{i}", "app.py", i))
+    db = build_db(_synth_lines(rng), str(tmp / "trace.db"))
+    pyr = build_pyramid(db.path, parents)
+    yield SynthDB(frames, parents), db, pyr
+    pyr.close()
+    db.close()
+
+
+def _windows(db, pyr):
+    t_min, t_max = db.time_range()
+    span = t_max - t_min
+    return [(t_min, t_max),                       # full
+            (t_min, t_min + 1),                   # 1 ns
+            (t_min + 137, t_max - 451),           # unaligned
+            (t_min + span // 3, t_min + span // 3 + 7919),
+            (t_min - 5000, t_max + 5000),         # beyond the data
+            (t_max + 10, t_max + 20),             # fully outside
+            (t_min + 64, t_min + 64 + pyr.bin_ns * 3 + 11)]
+
+
+# ---------------------------------------------------------------------------
+# determinism: trace.pyr bytes are a pure function of (trace.db, parents)
+# ---------------------------------------------------------------------------
+def test_pyramid_rebuild_deterministic(tmp_path, pyrdb):
+    sdb, db, pyr = pyrdb
+    again = build_pyramid(db.path, sdb.parents, str(tmp_path / "again.pyr"))
+    assert open(pyr.path, "rb").read() == open(again.path, "rb").read()
+    assert pyr.source["db_header_sha256"] == _db_header_sha(db.path)
+    assert pyr.source["n_events"] == db.n_events
+    again.close()
+
+
+# ---------------------------------------------------------------------------
+# exactness contract: tiles answer bitwise-equal to the per-event scans
+# ---------------------------------------------------------------------------
+def test_interval_profile_bitwise_equal(pyrdb):
+    sdb, db, pyr = pyrdb
+    lines = db.line_views()
+    for a, b in _windows(db, pyr):
+        ref = stats.interval_profile(lines, N_CTX, a, b)
+        got = pyr.interval_profile(N_CTX, a, b)
+        np.testing.assert_array_equal(ref, got, err_msg=f"[{a},{b})")
+
+
+def test_occupancy_bitwise_equal(pyrdb):
+    sdb, db, pyr = pyrdb
+    lines = db.line_views()
+    for a, b in _windows(db, pyr):
+        if b <= a:
+            continue
+        for nbins in (1, 7, 64):
+            ref = stats.occupancy(lines, a, b, nbins)
+            got = pyr.occupancy(a, b, nbins)
+            np.testing.assert_array_equal(ref, got,
+                                          err_msg=f"[{a},{b}) x{nbins}")
+    # the stats entry point delegates, with line selection
+    a, b = db.time_range()
+    np.testing.assert_array_equal(
+        stats.occupancy(lines, a, b, 8, pyramid=pyr, line_ids=[1, 3]),
+        stats.occupancy([lines[1], lines[3]], a, b, 8))
+
+
+def test_summary_tile_backed_equal(pyrdb):
+    sdb, db, pyr = pyrdb
+    lines = db.line_views()
+    for depth in (1, 3):
+        assert summary(lines, sdb, depth=depth, top=10**9) \
+            == summary(None, sdb, depth=depth, top=10**9, pyramid=pyr)
+    a, b = db.time_range()
+    assert summary(lines, sdb, t0=a + 101, t1=b - 57, depth=2) \
+        == summary(None, sdb, t0=a + 101, t1=b - 57, depth=2, pyramid=pyr)
+
+
+def test_exact_raster_pixel_equal(pyrdb):
+    sdb, db, pyr = pyrdb
+    lines = db.line_views()
+    for depth in (0, 2, 5):
+        for a, b in _windows(db, pyr)[:5]:
+            ref = rasterize(lines, sdb.parents, t0=a, t1=b, width=97,
+                            height=16, depth=depth)
+            got = pyr.rasterize(sdb.parents, t0=a, t1=b, width=97,
+                                height=16, depth=depth, mode="exact")
+            np.testing.assert_array_equal(ref.pixels, got.pixels,
+                                          err_msg=f"d{depth} [{a},{b})")
+    # default window (no t0/t1) matches too
+    ref = rasterize(lines, sdb.parents, width=97, height=16, depth=2)
+    got = pyr.rasterize(sdb.parents, width=97, height=16, depth=2,
+                        mode="exact")
+    np.testing.assert_array_equal(ref.pixels, got.pixels)
+
+
+def test_dominant_raster_reads_tiles(pyrdb):
+    sdb, db, pyr = pyrdb
+    # a window aligned to level-2 tiles, one pixel per tile: the raster
+    # must be exactly the stored dominant-context row
+    lev = 2
+    w_lev = pyr.bin_ns << lev
+    nb = pyr.lines[0].levels[lev]["bins"]
+    r = pyr.rasterize(sdb.parents, t0=pyr.t_min, t1=pyr.t_min + nb * w_lev,
+                      width=nb, height=len(pyr), depth=1, mode="dominant")
+    for row, i in enumerate(r.line_ids):
+        np.testing.assert_array_equal(r.pixels[row],
+                                      pyr.dominant_tiles(int(i), lev, 1))
+    # auto mode: zoomed past the finest bin -> exact -> per-event pixels
+    a = pyr.t_min + 100
+    b = a + max(pyr.bin_ns // 2, 1) * 8
+    got = pyr.rasterize(sdb.parents, t0=a, t1=b, width=8, height=4,
+                        depth=2, mode="auto")
+    ref = rasterize(db.line_views(), sdb.parents, t0=a, t1=b, width=8,
+                    height=4, depth=2)
+    np.testing.assert_array_equal(got.pixels, ref.pixels)
+
+
+def test_filter_composes_with_tiles(pyrdb):
+    sdb, db, pyr = pyrdb
+    lines = db.line_views()
+    t_min, t_max = db.time_range()
+    flt = TraceFilter(ranks={1, 2}, t0=t_min + 100, t1=t_max - 100,
+                      subtree=3)
+    line_ids, ctx_mask, f0, f1 = pyr.select(flt, sdb.parents)
+    assert line_ids == [1, 2] and (f0, f1) == (flt.t0, flt.t1)
+    kept = apply_filter(lines, flt, sdb.parents)
+    np.testing.assert_array_equal(
+        stats.interval_profile(kept, N_CTX, f0, f1),
+        pyr.interval_profile(N_CTX, f0, f1, lines=line_ids,
+                             ctx_mask=ctx_mask))
+    # and through the summary entry point (flt composes at tile level)
+    assert summary(kept, sdb, t0=f0, t1=f1, depth=2, top=10**9) \
+        == summary(None, sdb, depth=2, top=10**9, pyramid=pyr, flt=flt)
+
+
+# ---------------------------------------------------------------------------
+# ensure_pyramid: lazy cache + staleness on either input
+# ---------------------------------------------------------------------------
+def test_ensure_pyramid_cache_and_staleness(tmp_path):
+    rng = np.random.default_rng(3)
+    parents = np.array([-1, 0, 1], np.int64)
+    srcs = _synth_lines(rng, n_lines=2, n_events=40)
+    db = build_db(srcs, str(tmp_path / "trace.db"))
+    pyr_path = pyramid_path_for(db.path)
+
+    pyr = ensure_pyramid(db.path, parents)       # builds
+    assert pyr.path == pyr_path and os.path.exists(pyr_path)
+    pyr.close()
+    stamp = os.stat(pyr_path).st_mtime_ns
+    ensure_pyramid(db.path, parents).close()     # cache hit: no rebuild
+    assert os.stat(pyr_path).st_mtime_ns == stamp
+
+    # parents changed -> stale -> rebuilt
+    parents2 = np.array([-1, 0, 0], np.int64)
+    pyr2 = ensure_pyramid(db.path, parents2)
+    assert pyr2.parents_sha256 != TracePyramid(pyr_path).parents_sha256 \
+        or os.stat(pyr_path).st_mtime_ns != stamp
+    pyr2.close()
+
+    # trace.db changed (re-merged with an extra line) -> stale -> rebuilt
+    db.close()
+    extra = TraceData({"rank": 9, "thread": 0, "type": "cpu"},
+                      np.array([5], np.int64), np.array([9], np.int64),
+                      np.array([1], np.int64))
+    with build_db([db.path, extra], db.path) as db2:
+        with ensure_pyramid(db2.path, parents2) as pyr3:
+            assert len(pyr3) == len(db2) == 3
+            assert pyr3.source["db_header_sha256"] == _db_header_sha(db2.path)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: close() semantics on both readers (ISSUE 9 satellite)
+# ---------------------------------------------------------------------------
+def test_pyramid_close_semantics(tmp_path):
+    rng = np.random.default_rng(5)
+    parents = np.array([-1, 0], np.int64)
+    db = build_db(_synth_lines(rng, n_lines=1, n_events=30),
+                  str(tmp_path / "trace.db"))
+    a, b = db.time_range()
+    with build_pyramid(db.path, parents) as pyr:
+        pyr.interval_profile(2, a, b)                # opens its own tdb
+    with pytest.raises(ValueError):
+        pyr.busy_tiles(0, 0)
+    with pytest.raises(ValueError):
+        pyr.interval_profile(2, a, b)
+    db.close()
+    with pytest.raises(ValueError):
+        db.starts(0)
+    with pytest.raises(ValueError):
+        db.raw()
+
+
+def test_tracedb_remerge_in_place_after_close(tmp_path):
+    rng = np.random.default_rng(6)
+    db = build_db(_synth_lines(rng, n_lines=2, n_events=30),
+                  str(tmp_path / "trace.db"))
+    before = open(db.path, "rb").read()
+    reader = TraceDB(db.path)
+    assert len(reader.starts(0)) == 30
+    reader.close()                      # open-then-closed: re-merge safe
+    build_db(db.path, db.path)
+    assert open(db.path, "rb").read() == before
+    db.close()
+
+
+# ---------------------------------------------------------------------------
+# pipeline wiring: aggregate(trace_pyramid=True) writes the pyramid, and
+# serial vs process drivers produce byte-identical trace.pyr
+# ---------------------------------------------------------------------------
+def test_aggregate_trace_pyramid_driver_identical(tmp_path):
+    from repro.core.aggregate import aggregate
+    from tests.test_aggregate import write_rank_profiles
+    paths, _ = write_rank_profiles(tmp_path)
+    traces = [p.replace(".rpro", ".rtrc") for p in paths]
+    blobs = []
+    for tag, n_ranks in (("serial", 1), ("procs", 3)):
+        db = aggregate(paths, str(tmp_path / tag), n_ranks=n_ranks,
+                       n_threads=2, trace_paths=traces, trace_pyramid=True)
+        pyr_path = pyramid_path_for(db.trace_db_path())
+        assert os.path.exists(pyr_path)
+        with TracePyramid(pyr_path) as pyr:
+            assert len(pyr) == len(traces)
+        blobs.append(open(pyr_path, "rb").read())
+    assert blobs[0] == blobs[1]
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: default windows with unsorted pre-merge lines
+# ---------------------------------------------------------------------------
+def _serving_db():
+    frames = [Frame("root", "<program root>"),
+              Frame(HOST, "request:r0", "<serving>", 0),
+              Frame(HOST, "phase:prefill", "<serving>", 0),
+              Frame(HOST, "fn", "app.py", 3)]
+    return SynthDB(frames, np.array([-1, 0, 1, 2], np.int64))
+
+
+def _unsorted_line(kind="cpu"):
+    # first start is NOT the minimum: a default window derived from
+    # starts[0] begins at 50 and silently drops the [10, 40) event
+    ident = {"rank": 0, "type": kind,
+             ("thread" if kind == "cpu" else "stream"): 0}
+    return TraceData(ident, np.array([50, 10, 80], np.int64),
+                     np.array([70, 40, 95], np.int64),
+                     np.array([3, 3, 2], np.int64))
+
+
+def test_default_window_unsorted_line_summary_and_raster():
+    sdb = _serving_db()
+    lines = [_unsorted_line()]
+    assert summary(lines, sdb, depth=3, top=10) \
+        == summary(lines, sdb, t0=10, t1=95, depth=3, top=10)
+    ref = rasterize(lines, sdb.parents, t0=10, t1=95, width=17, depth=3)
+    got = rasterize(lines, sdb.parents, width=17, depth=3)
+    np.testing.assert_array_equal(ref.pixels, got.pixels)
+
+
+def test_default_window_unsorted_line_request_attribution():
+    sdb = _serving_db()
+    lines = [_unsorted_line("gpu")]
+    rows = stats.request_attribution(lines, sdb)
+    assert rows == stats.request_attribution(lines, sdb, t0=10, t1=95)
+    # the [10, 40) event attributes: r0 gets all 65 busy ns
+    assert rows == [("r0", 65.0, {"prefill": 65.0})]
+
+
+def test_default_window_unsorted_line_top_hot_loops():
+    frames = [Frame("root", "<program root>"),
+              Frame(PLACEHOLDER, "kernel:k", "0", 0),
+              Frame(GPU_OP, "<gpu op k>", "0", 0),
+              Frame(GPU_FUNC, "k", "k.py", 1),
+              Frame(GPU_LOOP, "loop", "k.py", 2),
+              Frame(GPU_OP, "FMA", "k.py", 3)]
+    parents = np.array([-1, 0, 1, 2, 3, 4], np.int64)
+    samples = np.zeros((len(frames), 1))
+    samples[3] = samples[5] = 8.0
+
+    class _Db(SynthDB):
+        stats = {"sum": samples}
+
+        def metric_id(self, name):
+            assert name == "gpu_inst/samples"
+            return 0
+
+    db = _Db(frames, parents)
+    td = TraceData({"rank": 0, "type": "gpu", "stream": 0},
+                   np.array([50, 10], np.int64),
+                   np.array([70, 40], np.int64),
+                   np.array([1, 1], np.int64))
+    rows = stats.top_hot_loops([td], db)
+    assert rows == stats.top_hot_loops([td], db, t0=10, t1=70)
+    # all 50 busy ns prorated onto the single interior op
+    assert rows == [("k", "loop", "k.py:3", "FMA", 8.0, 50.0)]
+
+
+# ---------------------------------------------------------------------------
+# satellite regression: filter clips straddling events to [t0, t1)
+# ---------------------------------------------------------------------------
+def test_filter_clips_straddling_events():
+    sdb = _serving_db()
+    td = TraceData({"rank": 0, "thread": 0, "type": "cpu"},
+                   np.array([0, 35, 90], np.int64),
+                   np.array([100, 55, 120], np.int64),
+                   np.array([3, 2, 3], np.int64))
+    cut = apply_filter([td], TraceFilter(t0=30, t1=60))
+    np.testing.assert_array_equal(cut[0].starts, [30, 35])
+    np.testing.assert_array_equal(cut[0].ends, [60, 55])
+    # so filter-then-default-window == explicit window on the original
+    assert summary(cut, sdb, depth=3, top=10) \
+        == summary([td], sdb, t0=30, t1=60, depth=3, top=10)
+
+
+# ---------------------------------------------------------------------------
+# satellite regression: vectorized request_spans == quadratic reference
+# ---------------------------------------------------------------------------
+def test_request_spans_matches_quadratic_reference():
+    rng = np.random.default_rng(11)
+    n_req = 5
+    frames = [Frame("root", "<program root>")]
+    parents = [-1]
+    for r in range(n_req):
+        frames.append(Frame(HOST, f"request:r{r}", "<serving>", 0))
+        parents.append(0)
+        frames.append(Frame(HOST, "phase:" + ("decode" if r % 2
+                                              else "prefill"),
+                            "<serving>", 0))
+        parents.append(2 * r + 1)
+    sdb = SynthDB(frames, np.asarray(parents, np.int64))
+    lines = []
+    for k in range(3):
+        n = 200
+        starts = np.sort(rng.integers(0, 10_000, n))
+        lines.append(TraceData(
+            {"rank": k, "type": "gpu", "stream": k}, starts,
+            starts + rng.integers(1, 500, n),
+            rng.integers(-2, len(frames) + 2, n)))     # incl. out-of-range
+
+    req, ph = stats.window_labels(sdb)
+    ref = {}
+    for td in lines:                     # the old O(unique x events) scan
+        for g in np.unique(np.asarray(td.ctx)):
+            if g < 0 or g >= len(req) or req[int(g)] is None:
+                continue
+            sel = np.asarray(td.ctx) == g
+            key = (req[int(g)], ph[int(g)] or "other")
+            s0 = int(np.asarray(td.starts)[sel].min())
+            e1 = int(np.asarray(td.ends)[sel].max())
+            cur = ref.get(key)
+            ref[key] = ((min(cur[0], s0), max(cur[1], e1)) if cur
+                        else (s0, e1))
+    got = stats.request_spans(lines, sdb)
+    assert got == ref and len(got) > 0
