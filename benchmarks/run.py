@@ -40,7 +40,7 @@ ALL = {
 
 # benchmarks whose results are persisted as BENCH_<name>.json
 TRACKED = ("aggregation", "channels", "traceview", "counters", "merge",
-           "pipeline", "fleet", "serving", "kstruct")
+           "pipeline", "fleet", "serving", "kstruct", "overhead")
 
 # --compare: a tracked stage time growing more than this fraction over
 # its committed BENCH_<name>.json baseline fails the sweep

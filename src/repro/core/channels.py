@@ -20,7 +20,9 @@ from __future__ import annotations
 
 import itertools
 import threading
-from typing import Any, Iterator, List, Optional, Sequence
+from typing import Any, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 _EMPTY = object()
 
@@ -178,3 +180,137 @@ class ChannelSet:
         # dict iteration is safe w.r.t. concurrent inserts under the GIL;
         # take a snapshot to be explicit.
         return list(self._channels.items())
+
+
+class RecordRing:
+    """Per-thread wait-free record ring for the dispatch hot path.
+
+    One application thread is the only producer; the monitor thread is
+    the only consumer.  Compared to ``SpscQueue`` the ring is tuned for
+    the profiler's record traffic:
+
+    - the producer appends one payload tuple per record with a **single
+      release-store of the write cursor** (slot write, then
+      ``_tail = tail + 1``; under the GIL the int store publishes with
+      the required ordering, in C it would be a release store);
+    - timed records additionally carry a ``(t_start, t_end, ctx)``
+      triple in a numpy-backed **trace lane** alongside the slot, so
+      the consumer can lift a whole drain batch of trace events with
+      one vectorized gather instead of re-packing Python tuples;
+    - the consumer reads in **epoch-stamped batches**
+      (``read_batch``): one cursor snapshot, one gather, one
+      ``_head`` publish per batch — per-thread FIFO order preserved.
+
+    ``try_append*`` never blocks: a full ring returns False and counts
+    ``full_waits`` (the producer decides whether to retry; the profiler
+    yields the GIL so the consumer can drain).
+    """
+
+    __slots__ = ("_slots", "_lane", "_capacity", "_head", "_tail",
+                 "appends", "reads", "epoch", "full_waits")
+
+    LANE_COLS = 3          # (t_start, t_end, ctx) int64 columns
+
+    def __init__(self, capacity: int = 1 << 15):
+        assert capacity > 0
+        self._slots: List[Any] = [None] * capacity
+        self._lane = np.zeros((capacity, self.LANE_COLS), np.int64)
+        self._capacity = capacity
+        self._head = 0          # written only by the consumer
+        self._tail = 0          # written only by the producer
+        self.appends = 0
+        self.reads = 0
+        self.epoch = 0          # one per consumed batch
+        self.full_waits = 0
+
+    # -- producer side ------------------------------------------------------
+    def try_append(self, payload: Any) -> bool:
+        """Append an untimed record (no trace-lane row).  Returns False
+        when full (never blocks)."""
+        tail = self._tail
+        if tail - self._head >= self._capacity:
+            self.full_waits += 1
+            return False
+        self._slots[tail % self._capacity] = payload   # write slot ...
+        self._tail = tail + 1                          # ... publish once
+        self.appends += 1
+        return True
+
+    def try_append_timed(self, payload: Any, t_start: int, t_end: int,
+                         ctx: int) -> bool:
+        """Append a record with a trace-lane row riding along (the
+        batched-trace path: the consumer gathers lane rows per drain)."""
+        tail = self._tail
+        if tail - self._head >= self._capacity:
+            self.full_waits += 1
+            return False
+        i = tail % self._capacity
+        lane = self._lane
+        lane[i, 0] = t_start
+        lane[i, 1] = t_end
+        lane[i, 2] = ctx
+        self._slots[i] = payload                       # write slot ...
+        self._tail = tail + 1                          # ... publish once
+        self.appends += 1
+        return True
+
+    # -- consumer side ------------------------------------------------------
+    def read_batch(self, limit: int = 1024
+                   ) -> Optional[Tuple[List[Any], "np.ndarray", int]]:
+        """Consume up to ``limit`` records: returns
+        ``(payloads, lane_rows, epoch)`` or None when empty.
+        ``lane_rows`` is an owned (n, 3) int64 copy aligned with
+        ``payloads`` (rows of untimed records are stale and must be
+        selected by payload tag).  ``_head`` is published once."""
+        head = self._head
+        n = self._tail - head
+        if n > limit:
+            n = limit
+        if n <= 0:
+            return None
+        cap = self._capacity
+        idx = np.arange(head, head + n) % cap
+        lane_rows = self._lane[idx]                    # gather (a copy)
+        slots = self._slots
+        ii = idx.tolist()
+        payloads = [slots[i] for i in ii]
+        for i in ii:
+            slots[i] = None                            # release refs ...
+        self._head = head + n                          # ... publish once
+        self.reads += n
+        self.epoch += 1
+        return payloads, lane_rows, self.epoch
+
+    def __len__(self) -> int:  # approximate (racy but monotonic-safe)
+        return max(0, self._tail - self._head)
+
+    @property
+    def empty(self) -> bool:
+        return self._head >= self._tail
+
+
+class RingSet:
+    """Registry of per-thread record rings, drained by the monitor.
+
+    Registration is the only locked operation (once per thread, off the
+    hot path).  ``items()`` yields rings in registration order — a
+    deterministic per-process drain order (attribution order within a
+    thread is the ring's FIFO order either way)."""
+
+    def __init__(self, capacity: int = 1 << 15):
+        self._lock = threading.Lock()
+        self._rings: dict = {}
+        self._capacity = capacity
+
+    def ring_for(self, thread_id) -> RecordRing:
+        r = self._rings.get(thread_id)
+        if r is None:
+            with self._lock:
+                r = self._rings.get(thread_id)
+                if r is None:
+                    r = RecordRing(self._capacity)
+                    self._rings[thread_id] = r
+        return r
+
+    def items(self):
+        return list(self._rings.items())

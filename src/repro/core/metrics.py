@@ -118,6 +118,17 @@ class NodeMetrics:
         else:
             arr += values
 
+    def merge_from(self, other: "NodeMetrics") -> None:
+        """Fold another node's metrics into this one, kind by kind —
+        the shadow-CCT graft (profiler flush) merging monitor-side
+        attribution into the application thread's tree."""
+        for kid, arr in other._kinds.items():
+            mine = self._kinds.get(kid)
+            if mine is None:
+                self._kinds[kid] = arr.copy()
+            else:
+                mine += arr
+
     def get(self, kind: MetricKind, metric: str) -> float:
         arr = self._kinds.get(kind.kind_id)
         if arr is None:

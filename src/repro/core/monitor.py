@@ -1,25 +1,32 @@
 """Measurement runtime (paper §4.1, Fig. 2): application threads, one GPU
-monitor thread, and N tracing threads coordinated via wait-free SPSC
-channels.
+monitor thread, and N tracing threads coordinated via wait-free,
+per-thread record rings.
 
-Message flow (the OpenCL/Level-Zero variant of §4.1, since on this stack the
-completion "callback" runs on the application thread):
+Message flow (the OpenCL/Level-Zero variant of §4.1, since on this stack
+the completion "callback" runs on the application thread):
 
   app thread:   dispatch I  -> unwind stack, insert placeholder P
-                            -> OP record (I, P, C_A) on its operation channel
-                completion  -> ACTIVITY record (A, P, C_A) on the same
-                               operation channel
-  monitor:      drains every thread's operation channel; matches activities
-                to operations; enqueues (A, P) on the owning thread's
-                activity channel C_A; if tracing, routes (A, P) to the
-                per-stream trace channel
+                            -> OP record (I, P) on its record ring
+                completion  -> ACTIVITY record (A, P) + trace-lane row
+                               on the same ring (one cursor publish each)
+  monitor:      drains every thread's ring in epoch-stamped batches
+                (``RecordRing.read_batch``); hands each batch to the
+                profiler's record handler, which performs the deferred
+                PC-sample draw, hardware-counter read, and metric
+                attribution into the thread's *shadow* CCT; completed
+                (A, P) pairs route onward to the per-stream trace
+                channels; trace-lane rows become one buffered trace
+                chunk per drain
   tracing thrd: polls its set of trace channels, appends to trace files
-  app thread:   drains C_A (at the next dispatch or flush) and attributes
-                A's metrics below P — heterogeneous calling context.
+  app thread:   never sees the records again — the shadow CCTs graft
+                into the per-thread trees at flush, when the owning
+                threads are quiescent (profiler.py).
 
-The monitor thread being the only producer into C_A (and the only consumer
-of each C_O) is what keeps every queue single-producer/single-consumer —
-the design point §4.1 makes explicitly.
+The ring's single producer (its app thread) and single consumer (the
+monitor) keep every queue SPSC — the design point §4.1 makes
+explicitly — and the monitor being the only caller of the record
+handler is what lets the deferred draw, counter rotation, and shadow
+attribution all run lock-free on one thread.
 """
 from __future__ import annotations
 
@@ -28,8 +35,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
-from repro.core.channels import BidirectionalChannel, ChannelSet, EMPTY, \
-    SpscQueue
+from repro.core.channels import RingSet, SpscQueue
 from repro.core.cct import CCTNode
 
 OP = 0
@@ -37,7 +43,7 @@ ACTIVITY = 1
 SHUTDOWN = 2
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class GpuOperation:
     """Invocation record I."""
     corr_id: int
@@ -48,7 +54,7 @@ class GpuOperation:
     module_id: Optional[int] = None
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class GpuActivity:
     """Measurement record A."""
     corr_id: int
@@ -67,30 +73,38 @@ class GpuActivity:
         return self.t_end - self.t_start
 
 
+# the record handler: (thread_id, payloads, lane_rows) ->
+# (completed [(GpuActivity, placeholder)], stat increments)
+RecordHandler = Callable[[int, List[Any], Any], tuple]
+
+
 class MonitorThread:
     """The GPU monitor thread of Fig. 2."""
 
-    def __init__(self, channels: ChannelSet, tracing: bool = False,
-                 n_tracing_threads: int = 1, poll_s: float = 1e-4):
-        self._channels = channels
+    def __init__(self, rings: RingSet, handler: RecordHandler,
+                 tracing: bool = False, n_tracing_threads: int = 1,
+                 poll_s: float = 1e-4, batch: int = 1024):
+        self._rings = rings
+        self._handler = handler
         self._tracing = tracing
         self._poll_s = poll_s
+        self._batch = batch
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run,
                                         name="repro-gpu-monitor",
                                         daemon=True)
-        self._pending_ops: Dict[int, tuple] = {}   # corr_id -> (op, C_A)
-        # True while a popped batch is being routed: quiesce() must not
-        # declare the system drained based on empty queues alone, because
-        # up to 1024 records can be in flight inside _drain_once
+        # True while a popped batch is being processed: quiesce() must
+        # not declare the system drained based on empty rings alone,
+        # because up to ``batch`` records can be in flight here
         self._routing = False
         # per-stream trace channels; monitor is the single producer
         self._trace_channels: Dict[int, SpscQueue] = {}
         self._trace_threads: List[TracingThread] = []
         self._n_tracing = max(1, n_tracing_threads)
         self.stats = {"ops": 0, "activities": 0, "routed": 0,
-                      "counter_records": 0}
-        self.trace_sink: Optional[Callable] = None   # (stream, A, P) -> None
+                      "counter_records": 0, "drains": 0}
+        # (stream, [(A, P), ...]) -> None, one call per drained batch
+        self.trace_sink: Optional[Callable] = None
 
     # -- lifecycle ----------------------------------------------------------
     def start(self):
@@ -108,10 +122,9 @@ class MonitorThread:
             t.stop()
 
     def quiesce(self, timeout: float = 5.0):
-        """Wait until all channels drain (used by flush)."""
+        """Wait until all rings and trace channels drain (used by flush)."""
         def queues_empty():
-            if not all(ch.operation.empty for _, ch in
-                       self._channels.items()):
+            if not all(ring.empty for _, ring in self._rings.items()):
                 return False
             return not self._tracing or all(
                 q.empty for q in self._trace_channels.values())
@@ -124,7 +137,7 @@ class MonitorThread:
         while time.monotonic() < deadline:
             # queues / flags / queues / flags.  The flags are raised before
             # each batch pop, so flags reading False rules out a batch
-            # popped from queues a preceding scan saw empty; the second
+            # popped from rings a preceding scan saw empty; the second
             # queue scan catches records a routing round moved *into* a
             # trace queue between the first scan and the flag read, and the
             # final flag read catches a tracer that popped that handoff
@@ -147,48 +160,37 @@ class MonitorThread:
                 break
 
     def _drain_once(self) -> bool:
-        """One polling round.  Records are popped and re-routed in batches
-        (``try_pop_many`` / ``try_push_many``) so the per-item Python call
-        overhead is paid once per batch; per-channel FIFO order is
-        preserved because each batch keeps arrival order."""
+        """One polling round: one epoch-stamped batch read per ring,
+        handed wholesale to the record handler (deferred draw +
+        attribution), completed activities routed to the per-stream
+        trace channels.  Per-thread FIFO order is the ring's order; the
+        cross-thread drain order is registration order, and nothing
+        downstream depends on it (the handler attributes into
+        per-thread shadow trees, and trace merges sort by timestamp)."""
         busy = False
-        for tid, ch in self._channels.items():
-            # flag raised *before* the pop: an observer sees either the
-            # flag or a still-non-empty queue, never a silent in-flight gap
+        stats = self.stats
+        for tid, ring in self._rings.items():
+            # flag raised *before* the read: an observer sees either the
+            # flag or a still-non-empty ring, never a silent in-flight gap
             self._routing = True
-            recs = ch.operation.try_pop_many(1024)
-            if not recs:
+            got = ring.read_batch(self._batch)
+            if got is None:
                 self._routing = False
                 continue
             busy = True
-            routed: Dict[Any, List[tuple]] = {}   # owner channel -> batch
-            traced: Dict[int, List[tuple]] = {}   # stream -> batch
-            for rec in recs:
-                tag = rec[0]
-                if tag == OP:
-                    _, op = rec
-                    self._pending_ops[op.corr_id] = (op, ch)
-                    self.stats["ops"] += 1
-                elif tag == ACTIVITY:
-                    _, act = rec
-                    self.stats["activities"] += 1
-                    if act.meta is not None and "counters" in act.meta:
-                        self.stats["counter_records"] += 1
-                    entry = self._pending_ops.pop(act.corr_id, None)
-                    if entry is None:
-                        continue
-                    op, owner_ch = entry
-                    routed.setdefault(owner_ch, []).append(
-                        (act, op.placeholder))
-                    if self._tracing:
-                        traced.setdefault(act.stream, []).append(
-                            (act, op.placeholder))
-            # route (A, P) batches back to the owning application threads
-            for owner_ch, batch in routed.items():
-                self._push_all(owner_ch.activity, batch)
-                self.stats["routed"] += len(batch)
-            for stream, batch in traced.items():
-                self._push_all(self._trace_queue(stream), batch)
+            payloads, lane, _epoch = got
+            acts, hstats = self._handler(tid, payloads, lane)
+            for k, v in hstats.items():
+                stats[k] = stats.get(k, 0) + v
+            stats["drains"] += 1
+            if acts:
+                stats["routed"] += len(acts)
+                if self._tracing:
+                    traced: Dict[int, List[tuple]] = {}
+                    for pair in acts:
+                        traced.setdefault(pair[0].stream, []).append(pair)
+                    for stream, batch in traced.items():
+                        self._push_all(self._trace_queue(stream), batch)
             self._routing = False
         return busy
 
@@ -248,14 +250,14 @@ class TracingThread(threading.Thread):
             recs = self.records.setdefault(stream, [])
             for act, placeholder in batch:
                 # 4th column: the dispatching app thread (rides
-                # GpuActivity.meta from Profiler.dispatch) — write()
+                # GpuActivity.meta from the record handler) — write()
                 # stamps it into the stream trace so aggregation can
                 # convert the node id through that thread's gmap
                 tid = (act.meta or {}).get("dispatch_tid", -1)
                 recs.append((act.t_start, act.t_end, placeholder.node_id,
                              tid))
-                if sink is not None:
-                    sink(stream, act, placeholder)
+            if sink is not None:
+                sink(stream, batch)   # one call (and one lock) per batch
             self.busy = False
         return progressed
 

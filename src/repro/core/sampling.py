@@ -21,6 +21,7 @@ count (1, or trip count inside while bodies) instead of sampled counts.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Dict, List, Optional
 
@@ -35,8 +36,12 @@ ICI_BW = 4.5e10              # ~bytes/s effective per link direction
 
 STALL_CLASSES = ("compute", "memory", "collective")
 
+# budgets at or below this draw as n categorical samples (inverse CDF)
+# instead of one multinomial — see draw_samples
+_SMALL_DRAW = 32
 
-@dataclasses.dataclass
+
+@dataclasses.dataclass(slots=True)
 class Sample:
     op_index: int            # index of the op within the module
     stall: str               # one of STALL_CLASSES
@@ -91,6 +96,18 @@ def op_weights(module: HloModule) -> "np.ndarray":
     return w, stall
 
 
+def sample_budget(duration_s: float, rate_hz: float,
+                  cap: Optional[int] = None) -> int:
+    """The per-dispatch sample count for one kernel execution — the
+    cheap integer math the dispatch path computes inline before
+    deferring the draw itself to the monitor thread (``draw_samples``).
+    At least one sample is always budgeted (the never-off contract)."""
+    n = max(1, int(duration_s * rate_hz))
+    if cap is not None:
+        n = max(1, min(n, int(cap)))
+    return n
+
+
 def pc_samples(module: HloModule, duration_s: float,
                rate_hz: float = 1e6, rng: Optional[np.random.Generator] = None,
                cap: Optional[int] = None) -> List[Sample]:
@@ -102,13 +119,26 @@ def pc_samples(module: HloModule, duration_s: float,
     samples drawn for this one execution — the serving governor's
     per-dispatch throttle (repro.serving.governor); at least one sample
     is always drawn, so fine-grained attribution never fully stops.
+
+    This is ``sample_budget`` + ``draw_samples``; the profiler's
+    deferred path calls the two halves from different threads.
     """
+    return draw_samples(module, sample_budget(duration_s, rate_hz, cap),
+                        rng)
+
+
+def draw_samples(module: HloModule, n: int,
+                 rng: Optional[np.random.Generator] = None) -> List[Sample]:
+    """Distribute exactly-budgeted ``n`` samples over the module's ops
+    (the draw core of ``pc_samples``).  Runs on the monitor thread in
+    the deferred path: the ``w/total_w`` lookups are cached on the
+    module, so consecutive dispatches of the same module amortize to
+    the multinomial itself."""
     ops = module.all_ops()
     if not ops:
         return []
     w, stall = op_weights(module)
     # normalized weights cached with the module: the division is O(ops)
-    # and this runs on the dispatch path
     p = getattr(module, "_op_p_cache", None)
     if p is None:
         total_w = w.sum()
@@ -116,11 +146,32 @@ def pc_samples(module: HloModule, duration_s: float,
         module._op_p_cache = p
     if p is None:
         return []
-    n = max(1, int(duration_s * rate_hz))
-    if cap is not None:
-        n = max(1, min(n, int(cap)))
+    counts = None
+    items = None
     if rng is not None:
-        counts = rng.multinomial(n, p)
+        if n <= _SMALL_DRAW:
+            # n independent categorical draws by inverse CDF — the same
+            # distribution as multinomial(n, p) but ~4x cheaper at the
+            # small per-dispatch budgets the governor runs (the deferred
+            # path pays this per dispatch on the monitor thread).  Pure
+            # python (bisect over a cached cdf list): at budget ~1 the
+            # numpy searchsorted/bincount/nonzero round-trips dominated
+            # the draw.  bisect_right == searchsorted(side="right") on
+            # the same float64 values, so the drawn ops are identical.
+            cdf_list = getattr(module, "_op_cdf_list_cache", None)
+            if cdf_list is None:
+                cdf = np.cumsum(p)
+                cdf[-1] = 1.0           # guard fp drift: u < 1 always lands
+                module._op_cdf_cache = cdf
+                cdf_list = cdf.tolist()
+                module._op_cdf_list_cache = cdf_list
+            cnt: Dict[int, int] = {}
+            for u in rng.random(n).tolist():
+                i = bisect.bisect_right(cdf_list, u)
+                cnt[i] = cnt.get(i, 0) + 1
+            items = sorted(cnt.items())
+        else:
+            counts = rng.multinomial(n, p)
     else:
         counts = np.floor(n * p + 0.5).astype(np.int64)
         if counts.sum() == 0:
@@ -131,14 +182,15 @@ def pc_samples(module: HloModule, duration_s: float,
             # heaviest op
             counts[int(np.argmax(p))] = 1
     # touch only the ops that drew samples: with the governor capping n
-    # far below the op count, the dispatch-path cost must be O(samples),
-    # not O(module ops)
+    # far below the op count, the per-dispatch draw cost must be
+    # O(samples), not O(module ops)
+    if items is None:
+        items = [(int(i), int(counts[i])) for i in np.nonzero(counts)[0]]
     kstructs = module.kernel_structures() \
         if hasattr(module, "kernel_structures") else {}
     out: List[Sample] = []
-    for i in np.nonzero(counts)[0]:
+    for i, c in items:
         op = ops[i]
-        c = int(counts[i])
         ks = kstructs.get(op.index)
         if ks is None:
             out.append(Sample(op_index=op.index,
@@ -153,6 +205,138 @@ def pc_samples(module: HloModule, duration_s: float,
                               stall=ks.leaves[leaf].stall, count=lc,
                               leaf=leaf))
     return out
+
+
+_MASK48 = (1 << 48) - 1
+_MASK64 = (1 << 64) - 1
+
+# splitmix64 constants (vectorized counter-hash uniforms)
+_GOLDEN = 0x9E3779B97F4A7C15
+_MIX1 = 0xBF58476D1CE4E5B9
+_MIX2 = 0x94D049BB133111EB
+_INV53 = 1.0 / (1 << 53)
+
+
+def _mix64(z: int) -> int:
+    """One splitmix64 finalizer round over python ints (64-bit wrap)."""
+    z &= _MASK64
+    z = ((z ^ (z >> 30)) * _MIX1) & _MASK64
+    z = ((z ^ (z >> 27)) * _MIX2) & _MASK64
+    return z ^ (z >> 31)
+
+
+class DispatchStream:
+    """One dispatch's deterministic random stream, duck-typed to the
+    slice of the Generator API the draw uses (``random``,
+    ``multinomial``).
+
+    Small draws — the per-dispatch budgets the governor actually runs —
+    come from a counter-mode splitmix64 hash of the dispatch key, a few
+    integer ops per value; re-keying the Philox generator costs ~7us in
+    numpy state plumbing, which dominated the whole deferred draw.  The
+    real keyed Generator is materialized lazily only for draws above
+    ``_SMALL_DRAW``, where a kernel ran long enough that the multinomial
+    amortizes.  Values are a pure function of (seed, lane, seq, draw
+    position) either way — drain-order invariant.
+
+    One mutable instance per KeyedRng, re-keyed per record (monitor
+    thread only); never hold one across records."""
+
+    __slots__ = ("_owner", "_key", "_pos", "_lane", "_seq", "_gen")
+
+    def __init__(self, owner: "KeyedRng"):
+        self._owner = owner
+
+    def rekey(self, lane: int, seq: int) -> None:
+        # _mix64(seed ^ _mix64(k2 + GOLDEN)), both rounds inlined: this
+        # runs once per drained activity record
+        z = ((((lane & 0xFFFF) << 48) | (seq & _MASK48)) + _GOLDEN) \
+            & _MASK64
+        z = ((z ^ (z >> 30)) * _MIX1) & _MASK64
+        z = ((z ^ (z >> 27)) * _MIX2) & _MASK64
+        z = self._owner._seed ^ z ^ (z >> 31)
+        z = ((z ^ (z >> 30)) * _MIX1) & _MASK64
+        z = ((z ^ (z >> 27)) * _MIX2) & _MASK64
+        self._key = z ^ (z >> 31)
+        self._pos = 0
+        self._lane = lane
+        self._seq = seq
+        self._gen = None
+
+    def random(self, n: int = 1):
+        """n uniforms in [0, 1), consumed from the stream position."""
+        pos = self._pos
+        self._pos = pos + n
+        if n == 1:
+            out = np.empty(1)
+            out[0] = (_mix64(self._key + (pos + 1) * _GOLDEN)
+                      >> 11) * _INV53
+            return out
+        idx = np.arange(pos + 1, pos + n + 1, dtype=np.uint64)
+        z = np.uint64(self._key) + idx * np.uint64(_GOLDEN)
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(_MIX1)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(_MIX2)
+        z ^= z >> np.uint64(31)
+        return (z >> np.uint64(11)).astype(np.float64) * _INV53
+
+    def multinomial(self, n: int, p) -> np.ndarray:
+        n = int(n)
+        if n <= _SMALL_DRAW:
+            cdf = np.cumsum(p)
+            cdf[-1] = 1.0
+            idx = cdf.searchsorted(self.random(n), side="right")
+            return np.bincount(idx, minlength=len(p))
+        if self._gen is None:
+            self._gen = self._owner.keyed(self._lane, self._seq)
+        return self._gen.multinomial(n, p)
+
+
+class KeyedRng:
+    """Deterministic per-dispatch generator streams for the deferred
+    PC-sample draw.
+
+    The legacy inline path consumed one shared ``default_rng(seed)`` in
+    dispatch order, so the drawn values depended on the order draws
+    happened to run — unacceptable once the draw moves off-thread,
+    where drain batching would permute it.  ``keyed(lane, seq)``
+    instead re-keys a single Philox bit generator to the 128-bit key
+    ``(seed, lane << 48 | seq)`` — ``lane`` the dispatching thread's
+    stable index, ``seq`` its per-thread dispatch sequence number — so
+    every dispatch owns an independent counter-mode stream and the
+    draw is a pure function of (seed, lane, seq), invariant under any
+    drain order or batch split.
+
+    Re-keying swaps the bit-generator state in place instead of
+    constructing ``Generator(Philox(key=...))`` per dispatch (~4x
+    cheaper; the states are bit-identical to fresh construction, which
+    ``tests/test_dispatch_path.py`` pins).  Not thread-safe: the
+    monitor thread is the only caller.
+    """
+
+    def __init__(self, seed: int):
+        self._seed = int(seed) & _MASK64
+        self._bg = np.random.Philox(key=[self._seed, 0])
+        self.generator = np.random.Generator(self._bg)
+        self._stream = DispatchStream(self)
+
+    def stream(self, lane: int, seq: int) -> DispatchStream:
+        """The cheap per-dispatch stream (the deferred path's default);
+        see DispatchStream.  Returns the shared instance re-keyed."""
+        s = self._stream
+        s.rekey(lane, seq)
+        return s
+
+    def keyed(self, lane: int, seq: int) -> np.random.Generator:
+        state = self._bg.state
+        inner = state["state"]
+        inner["key"][:] = (self._seed,
+                           ((lane & 0xFFFF) << 48) | (seq & _MASK48))
+        inner["counter"][:] = 0
+        state["buffer_pos"] = 4         # buffer empty: first draw refills
+        state["has_uint32"] = 0
+        state["uinteger"] = 0
+        self._bg.state = state
+        return self.generator
 
 
 def instruction_counts(module: HloModule,

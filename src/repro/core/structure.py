@@ -242,6 +242,7 @@ class HloModule:
             # parses with flops=0)
             self._op_weights_cache = None
             self._op_p_cache = None
+            self._op_cdf_cache = None
             self._counter_cache = None
         return bound
 

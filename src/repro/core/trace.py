@@ -76,6 +76,33 @@ class TraceWriter:
         chunk[:, 2] = np.asarray(ctx_ids)
         self._chunks.append(chunk)
 
+    def append_chunk(self, chunk: "np.ndarray") -> None:
+        """Adopt a prebuilt ``(n, 3)`` event chunk without re-packing —
+        the buffered-trace path: the monitor thread gathers one chunk
+        per ring drain (``RecordRing.read_batch`` trace-lane rows) and
+        the writer takes it wholesale, one call per drain batch.  Chunk
+        boundaries never reach the file (``close`` concatenates), so
+        any batch split produces byte-identical output to per-event
+        ``append`` calls in the same order."""
+        chunk = np.asarray(chunk)
+        if chunk.ndim != 2 or chunk.shape[1] != 3:
+            raise ValueError("append_chunk wants an (n, 3) event array")
+        if not len(chunk):
+            return
+        if chunk.dtype == np.int64:
+            chunk = chunk.view(np.uint64)       # same bits, no copy
+        elif chunk.dtype != np.uint64:
+            chunk = chunk.astype(np.uint64)
+        if self._records:   # preserve interleaving with scalar appends
+            self._chunks.append(
+                np.asarray(self._records, np.uint64).reshape(-1, 3))
+            self._records = []
+        s64 = chunk[:, 0].astype(np.int64)
+        if int(s64[0]) < self._last_start or bool((s64[1:] < s64[:-1]).any()):
+            self.out_of_order = True
+        self._last_start = int(s64[-1])
+        self._chunks.append(chunk)
+
     def close(self) -> None:
         import json
         with open(self.path, "wb") as f:

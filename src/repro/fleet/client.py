@@ -224,6 +224,13 @@ class ShardProducer:
             db_dir, os.path.join(self.outbox_dir, "{id}" + ENVELOPE_SUFFIX),
             shard_id=shard_id, producer=self.producer, meta=full_meta)
         self._enforce_bound()
+        # refresh the combined backpressure flag on every enqueue, not
+        # just in deliver/tick loops: a producer that only stages (e.g.
+        # an exporter between governor ticks) must see its own outbox
+        # filling — and the daemon backlog when observable — *before*
+        # the governor's next note_backpressure read, or it keeps
+        # exporting at full fidelity into a pipe that is already behind
+        self.poll_backpressure()
         return sid
 
     def poll_backpressure(self) -> bool:

@@ -13,10 +13,24 @@ Control law (docs/serving.md):
   that still measures every dispatch (coarse timing + tracing + one PC
   sample) — measurement is **never fully disabled**;
 - every ``interval`` dispatches the governor reads the overhead of the
-  window just passed (``tool_ns / app_ns``).  Over budget -> step one
-  level down (less fidelity) immediately.  Under ``budget * headroom``
-  for ``patience`` consecutive windows -> step one level up (hysteresis,
-  so the controller doesn't hunt on noise);
+  window just passed: ``(tool_ns + deferred_ns) / app_ns``.  With the
+  wait-free dispatch path the PC-sample draw and attribution run on the
+  monitor thread (``deferred_ns``), not on the dispatch path
+  (``tool_ns``) — but they still burn a core, so the budget governs the
+  tool's *total* measurement cost, and the sampling knobs still have a
+  signal to act on.  Over budget -> step one level down (less fidelity)
+  immediately.  Under ``budget * headroom`` for ``patience`` consecutive
+  windows -> step one level up (hysteresis, so the controller doesn't
+  hunt on noise);
+- **SLO shed**: ``observe(p99_ms=...)`` optionally carries the serving
+  loop's rolling p99 latency.  The governor keeps an EMA baseline of it
+  (``slo_alpha``); a window whose p99 exceeds the baseline by more than
+  ``slo_degradation`` (fractional) sheds one level even when the
+  overhead budget is met — measurement cost that doesn't show up in
+  tool/app (cache pressure, monitor-core contention) still shows up in
+  tail latency.  Fidelity never rises while degraded, and the baseline
+  only learns from non-degraded windows (the incident doesn't poison
+  the reference);
 - fleet backpressure composes: while ``note_backpressure(True)`` is in
   effect (the ShardProducer's ``throttled`` flag, fed by the daemon's
   spool depth), the governor will not raise fidelity and steps down one
@@ -44,24 +58,32 @@ class GovernorLevel:
 
 
 # Fidelity ladder, full -> floor.  The floor still times and traces
-# every dispatch and draws one PC sample (pc_samples never returns
-# fewer than one) — the "never off" contract.
+# every dispatch and draws one PC sample (the sample budget never
+# rounds below one) — the "never off" contract.
+#
+# Rung costs, re-tuned for the wait-free dispatch path: sample_scale /
+# sample_cap shed *monitor-side* cost (the deferred draw + attribution,
+# the dominant term), while unwind_depth trims the dispatch-side
+# context-memo key walk — cheap once cached, so the middle rungs keep
+# deeper unwinds than they used to and lean on tighter caps instead.
 LEVELS: Tuple[GovernorLevel, ...] = (
     GovernorLevel("full", 1.0, None, 64),
-    GovernorLevel("sampled-1/4", 0.25, 4096, 64),
-    GovernorLevel("sampled-1/16", 1.0 / 16, 1024, 16),
-    GovernorLevel("sampled-1/64", 1.0 / 64, 256, 8),
+    GovernorLevel("sampled-1/4", 0.25, 2048, 64),
+    GovernorLevel("sampled-1/16", 1.0 / 16, 512, 32),
+    GovernorLevel("sampled-1/64", 1.0 / 64, 64, 16),
     GovernorLevel("coarse", 0.0, 1, 0),
 )
 
 
 @dataclasses.dataclass
 class GovernorConfig:
-    budget: float = 0.05        # max tool_ns / app_ns (5% dispatch overhead)
+    budget: float = 0.05        # max (tool+deferred) ns / app ns
     headroom: float = 0.5       # raise fidelity only below budget*headroom
     interval: int = 64          # dispatches per control window
     patience: int = 3           # consecutive low windows before stepping up
     start_level: int = 0
+    slo_degradation: float = 0.5   # shed when p99 > baseline * (1 + this)
+    slo_alpha: float = 0.2         # EMA weight for the p99 baseline
 
     def __post_init__(self):
         if not 0 < self.budget:
@@ -70,6 +92,10 @@ class GovernorConfig:
             raise ValueError("headroom must be in [0, 1]")
         if self.interval < 1 or self.patience < 1:
             raise ValueError("interval and patience must be >= 1")
+        if not self.slo_degradation > 0:
+            raise ValueError("slo_degradation must be positive")
+        if not 0 < self.slo_alpha <= 1:
+            raise ValueError("slo_alpha must be in (0, 1]")
 
 
 @dataclasses.dataclass
@@ -106,6 +132,9 @@ class OverheadGovernor:
         self.throttle_ups = 0
         self._low_streak = 0
         self._last = dict(profiler.overhead_counters())
+        self.slo_baseline_ms: Optional[float] = None
+        self.slo_degraded = False
+        self.slo_sheds = 0
         self._apply()
 
     # -- knob application ---------------------------------------------------
@@ -135,24 +164,57 @@ class OverheadGovernor:
             self._step(+1)
         self.backpressured = bool(throttled)
 
-    def overhead(self) -> float:
-        """Cumulative measured dispatch overhead, tool/app."""
-        c = self.profiler.overhead_counters()
-        return c["tool_ns"] / max(c["app_ns"], 1)
+    @staticmethod
+    def _tool_total(c: dict) -> int:
+        # dispatch-path cost + the monitor-side deferred draw/attribution
+        # cost (absent from stub profilers that predate deferral)
+        return c["tool_ns"] + c.get("deferred_ns", 0)
 
-    def observe(self) -> Optional[Decision]:
+    def overhead(self) -> float:
+        """Cumulative measured tool overhead, (tool + deferred)/app."""
+        c = self.profiler.overhead_counters()
+        return self._tool_total(c) / max(c["app_ns"], 1)
+
+    def _slo_check(self, p99_ms: Optional[float]) -> bool:
+        """Update the SLO state for one closed window; True = degraded."""
+        if p99_ms is None or p99_ms <= 0:
+            # no latency signal this window: keep the baseline, and a
+            # prior degraded verdict stands until a healthy p99 clears it
+            return self.slo_degraded
+        cfg = self.config
+        base = self.slo_baseline_ms
+        if base is not None and p99_ms > base * (1.0 + cfg.slo_degradation):
+            self.slo_degraded = True
+            return True
+        self.slo_degraded = False
+        # learn only from non-degraded windows
+        self.slo_baseline_ms = p99_ms if base is None else \
+            (1.0 - cfg.slo_alpha) * base + cfg.slo_alpha * p99_ms
+        return False
+
+    def observe(self, p99_ms: Optional[float] = None) -> Optional[Decision]:
         """One control step; returns the Decision when a window closed
-        (every ``config.interval`` dispatches), else None."""
+        (every ``config.interval`` dispatches), else None.
+
+        ``p99_ms``: the serving loop's current rolling p99 latency
+        (ServingStats), when it has one — the SLO-shed input."""
         counters = self.profiler.overhead_counters()
         dn = counters["dispatches"] - self._last["dispatches"]
         if dn < self.config.interval:
             return None
-        tool = counters["tool_ns"] - self._last["tool_ns"]
+        tool = self._tool_total(counters) - self._tool_total(self._last)
         app = counters["app_ns"] - self._last["app_ns"]
         self._last = dict(counters)
         overhead = tool / max(app, 1)
         cfg = self.config
-        if overhead > cfg.budget:
+        degraded = self._slo_check(p99_ms)
+        if degraded:
+            # tail latency blew past the rolling baseline: shed even
+            # under budget, and reset the step-up streak
+            self._low_streak = 0
+            self.slo_sheds += 1
+            self._step(+1)
+        elif overhead > cfg.budget:
             self._low_streak = 0
             self._step(+1)
         elif overhead < cfg.budget * cfg.headroom and not self.backpressured:
@@ -181,4 +243,7 @@ class OverheadGovernor:
             "throttle_downs": self.throttle_downs,
             "throttle_ups": self.throttle_ups,
             "backpressured": self.backpressured,
+            "slo_baseline_ms": self.slo_baseline_ms or 0.0,
+            "slo_degraded": self.slo_degraded,
+            "slo_sheds": self.slo_sheds,
         }

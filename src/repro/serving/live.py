@@ -32,7 +32,7 @@ from repro.core.profiler import Profiler
 from repro.serving.governor import GovernorConfig, OverheadGovernor
 from repro.serving.stats import ServingStats
 from repro.serving.telemetry import TelemetryExporter
-from repro.serving.window import RequestWindow
+from repro.serving.window import DECODE, PREFILL, RequestWindow
 
 
 class ServingProfiler:
@@ -95,7 +95,11 @@ class ServingProfiler:
             if self.governor is not None:
                 self.governor.note_backpressure(self.producer.throttled)
         if self.governor is not None:
-            self.governor.observe()
+            # SLO feed: the worst current rolling p99 across phases (0.0
+            # — no requests in the window yet — means no signal)
+            p99 = max(self.stats.percentile_ms(PREFILL, 99),
+                      self.stats.percentile_ms(DECODE, 99))
+            self.governor.observe(p99_ms=p99 if p99 > 0 else None)
         if self.exporter is not None and \
                 self.wall() - self._last_export >= self.export_every_s:
             self.export_now()

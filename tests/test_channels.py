@@ -2,6 +2,7 @@
 import threading
 from collections import deque
 
+import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 
@@ -161,3 +162,107 @@ def test_batch_threaded_stress():
     tp.start(); tc.start()
     tp.join(timeout=60); tc.join(timeout=60)
     assert out == list(range(N))
+
+
+# ---------------------------------------------------------------------------
+# RecordRing: the dispatch hot path's per-thread ring (ISSUE 10)
+# ---------------------------------------------------------------------------
+def _ring():
+    from repro.core.channels import RecordRing
+    return RecordRing
+
+
+def test_record_ring_fifo_and_bounds():
+    ring = _ring()(4)
+    assert ring.empty and len(ring) == 0
+    assert ring.read_batch() is None
+    for i in range(4):
+        assert ring.try_append(("rec", i))
+    assert not ring.try_append(("rec", 4)), "full ring must refuse"
+    assert ring.full_waits == 1
+    payloads, lane, epoch = ring.read_batch()
+    assert payloads == [("rec", i) for i in range(4)]
+    assert lane.shape == (4, 3) and epoch == 1
+    assert ring.empty
+    # wraparound across the capacity boundary preserves FIFO order
+    for i in range(10):
+        assert ring.try_append_timed(i, 10 * i, 10 * i + 5, i)
+        payloads, lane, _ = ring.read_batch()
+        assert payloads == [i]
+        assert lane.tolist() == [[10 * i, 10 * i + 5, i]]
+
+
+def test_record_ring_lane_rows_ride_the_batch():
+    """Timed records carry their (t_start, t_end, ctx) row in the numpy
+    trace lane, gathered per batch as an owned copy aligned with the
+    payload list — the batched-trace-append contract."""
+    ring = _ring()(8)
+    ring.try_append(("op", 0))                 # untimed: stale lane row
+    ring.try_append_timed(("act", 0), 100, 150, 7)
+    ring.try_append_timed(("act", 1), 200, 260, 9)
+    payloads, lane, _ = ring.read_batch()
+    assert [p[0] for p in payloads] == ["op", "act", "act"]
+    assert lane[1:].tolist() == [[100, 150, 7], [200, 260, 9]]
+    # the gather is a copy: later appends must not mutate a drained batch
+    snapshot = lane.copy()
+    for i in range(8):
+        ring.try_append_timed(("act", 2 + i), 300 + i, 300 + i, 1)
+    assert (lane == snapshot).all()
+
+
+def test_record_ring_batch_limit_and_epochs():
+    ring = _ring()(16)
+    for i in range(10):
+        ring.try_append(i)
+    p1, _, e1 = ring.read_batch(limit=4)
+    p2, _, e2 = ring.read_batch(limit=4)
+    p3, _, e3 = ring.read_batch(limit=4)
+    assert (p1, p2, p3) == ([0, 1, 2, 3], [4, 5, 6, 7], [8, 9])
+    assert (e1, e2, e3) == (1, 2, 3)
+    assert ring.appends == 10 and ring.reads == 10
+
+
+def test_record_ring_spsc_threaded_stress():
+    """One producer thread, one consumer thread, a ring much smaller
+    than the record count: every record arrives exactly once, in order,
+    with its lane row still aligned to its payload."""
+    ring = _ring()(256)
+    N = 100_000
+    got, got_lane = [], []
+
+    def producer():
+        i = 0
+        while i < N:
+            if ring.try_append_timed(i, i, i + 1, i % 7):
+                i += 1
+
+    def consumer():
+        while len(got) < N:
+            batch = ring.read_batch(128)
+            if batch is None:
+                continue
+            payloads, lane, _ = batch
+            got.extend(payloads)
+            got_lane.append(lane)
+
+    tp = threading.Thread(target=producer)
+    tc = threading.Thread(target=consumer)
+    tp.start(); tc.start()
+    tp.join(timeout=60); tc.join(timeout=60)
+    assert got == list(range(N))
+    lane = np.concatenate(got_lane)
+    assert lane.shape == (N, 3)
+    assert lane[:, 0].tolist() == list(range(N))
+    assert (lane[:, 1] - lane[:, 0] == 1).all()
+    assert (lane[:, 2] == np.arange(N) % 7).all()
+
+
+def test_ring_set_registration_and_reuse():
+    from repro.core.channels import RingSet
+    rings = RingSet(capacity=8)
+    a = rings.ring_for("t1")
+    assert rings.ring_for("t1") is a            # one ring per thread
+    b = rings.ring_for("t2")
+    assert b is not a
+    assert [tid for tid, _ in rings.items()] == ["t1", "t2"]
+    assert a._capacity == 8

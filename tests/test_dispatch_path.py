@@ -1,0 +1,403 @@
+"""ISSUE 10: the wait-free dispatch path.
+
+Pins the tentpole contracts end to end: per-thread record rings lose or
+duplicate nothing under concurrent dispatch and preserve per-thread FIFO
+order; the deferred PC-sample draw is a pure function of the dispatch
+identity (seed, thread lane, seq) — invariant under monitor drain order
+and batch splits; multi-threaded runs with bound thread indices produce
+byte-identical canonical databases, and the exactly-once spine (one-shot
+aggregate == shards + merge_databases) holds unchanged; and the
+overhead-counter snapshot is internally consistent under a concurrent
+reader hammer (the satellite (a) read-vs-update race).
+
+Also pins ``KeyedRng``'s in-place state-swap against fresh
+``Generator(Philox(key))`` construction (the optimization's correctness
+claim in ``repro.core.sampling``) and ``DispatchStream``'s counter-hash
+stream determinism.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import sampling
+from repro.core.aggregate import aggregate
+from repro.core.merge import merge_databases
+from repro.core.profiler import Profiler
+from repro.core.sampling import KeyedRng, _SMALL_DRAW
+
+from test_kstruct import KERNEL_HLO, bound_module, hand_structure
+from test_merge import assert_db_identical, db_bytes
+
+
+class ThreadClock:
+    """Deterministic per-thread clock: thread ``i`` (after ``bind(i)``)
+    returns ``i << 44`` plus a fixed step per call, so every timestamp
+    is a pure function of the calling thread's own call count —
+    scheduling-invariant — and no two threads' timestamps ever collide
+    (distinct bases)."""
+
+    def __init__(self, step=1000):
+        self._local = threading.local()
+        self.step = step
+
+    def bind(self, index):
+        self._local.base = int(index) << 44
+        self._local.n = 0
+
+    def __call__(self):
+        loc = self._local
+        n = loc.n = getattr(loc, "n", 0) + 1
+        return getattr(loc, "base", 0) + n * self.step
+
+
+def _run_threads(n, target):
+    barrier = threading.Barrier(n)
+    errors = []
+
+    def body(i):
+        try:
+            barrier.wait()
+            target(i)
+        except Exception as e:             # surface, don't hang the join
+            errors.append(e)
+
+    threads = [threading.Thread(target=body, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# concurrent dispatch stress: nothing lost, nothing duplicated, FIFO
+# ---------------------------------------------------------------------------
+def test_concurrent_dispatch_stress(tmp_path):
+    """8 threads x 10k dispatches of a randomized kernel mix (including
+    a kstruct-bound module and budgets above ``_SMALL_DRAW``, so both
+    draw paths run).  Every dispatch must surface exactly once — in the
+    monitor stats, the overhead counters, and the per-thread trace
+    chunks — and each thread's trace rows must be in its dispatch
+    (FIFO) order."""
+    n_threads, n_disp = 8, 10_000
+    clock = ThreadClock(step=1000)
+    prof = Profiler(str(tmp_path / "run"), tracing=True, rng_seed=0,
+                    sample_rate_hz=1e6, clock=clock, unwind=False)
+    mid = prof.register_module("flash", KERNEL_HLO)
+    assert prof.register_kernel_structures(mid, [hand_structure()]) == 1
+    # duration_ns overrides -> deterministic budgets: 1 (floor), 7
+    # (small-draw categorical), 100 (> _SMALL_DRAW: lazy Philox path)
+    mix = [("kernel", "flash", mid, 100_000),
+           ("kernel", "flash", mid, 7_000),
+           ("kernel", "k0", None, 1_000),
+           ("copy", "h2d", None, 2_000),
+           ("sync", "s", None, 1_000)]
+
+    def worker(i):
+        prof.bind_thread(i)
+        clock.bind(i)
+        rng = np.random.default_rng(i)
+        picks = rng.integers(0, len(mix), size=n_disp)
+        for j in range(n_disp):
+            kind, name, m, dur = mix[picks[j]]
+            with prof.dispatch(kind, name, stream=0, module_id=m,
+                               duration_ns=dur):
+                pass
+
+    with prof:
+        _run_threads(n_threads, worker)
+        assert prof.flush(timeout=60.0)
+
+    total = n_threads * n_disp
+    stats = prof._monitor.stats
+    assert stats["ops"] == total            # every OP record drained
+    assert stats["activities"] == total     # every ACTIVITY record drained
+    assert stats["routed"] == total         # every activity trace-routed
+    c = prof.overhead_counters()
+    assert c["dispatches"] == total
+    assert c["samples_kept"] > 0
+    # ring accounting closes: appends == reads (OP + ACTIVITY per dispatch)
+    rings = prof._rings.items()
+    assert sum(r.appends for _, r in rings) == 2 * total
+    assert sum(r.reads for _, r in rings) == 2 * total
+    # per-thread FIFO: each thread's trace chunks concatenate to exactly
+    # n_disp rows with strictly increasing starts (the deterministic
+    # clock makes any reorder, loss, or duplicate a visible violation)
+    for st in prof._threads.values():
+        lane = np.concatenate([np.asarray(ch) for ch in st.trace_chunks])
+        assert lane.shape == (n_disp, 3)
+        starts = lane[:, 0]
+        assert (np.diff(starts) > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# byte-determinism: bound lanes, deterministic clocks, keyed draws
+# ---------------------------------------------------------------------------
+def _mt_run(out_dir, *, rank=0, n_threads=4, n_disp=150, batch=None):
+    """A deterministic multi-threaded run: each worker binds its thread
+    index, gets its own clock lane, and dispatches a module-bound kernel
+    mix on its own stream."""
+    clock = ThreadClock(step=1000)
+    prof = Profiler(str(out_dir), tracing=True, rng_seed=0, rank=rank,
+                    sample_rate_hz=1e6, clock=clock, unwind=False)
+    if batch is not None:
+        prof._monitor._batch = batch
+    mid = prof.register_module("flash", KERNEL_HLO)
+    prof.register_kernel_structures(mid, [hand_structure()])
+
+    def worker(i):
+        prof.bind_thread(i)
+        clock.bind(i)
+        for j in range(n_disp):
+            dur = (1_000, 7_000, 100_000)[(i + j) % 3]
+            with prof.dispatch("kernel", "flash", stream=i, module_id=mid,
+                               duration_ns=dur):
+                pass
+            with prof.dispatch("copy", "h2d", stream=i, nbytes=1 << 20,
+                               duration_ns=2_000):
+                pass
+
+    with prof:
+        _run_threads(n_threads, worker)
+        assert prof.flush(timeout=60.0)
+        paths = prof.write()
+    profs = [p for k, p in sorted(paths.items()) if "trace" not in k]
+    traces = [p for k, p in sorted(paths.items()) if "trace" in k]
+    return profs, traces
+
+
+def test_multithreaded_runs_byte_identical(tmp_path):
+    """Five repeats of the same bound-lane multi-threaded workload
+    aggregate to byte-identical canonical databases: thread scheduling,
+    ring interleaving, and monitor drain timing must leave no residue in
+    the database bytes (the acceptance pin for satellite (c))."""
+    want = None
+    for rep in range(5):
+        profs, traces = _mt_run(tmp_path / f"run{rep}")
+        db = str(tmp_path / f"db{rep}")
+        aggregate(profs, db, trace_paths=traces)
+        got = db_bytes(db)
+        if want is None:
+            want = got
+        else:
+            for fn, blob in want.items():
+                assert got[fn] == blob, f"{fn} diverged on repeat {rep}"
+
+
+def test_drain_order_and_batch_split_invariance(tmp_path):
+    """The deferred draw + batched trace appends must be invariant to
+    how the monitor happens to slice the rings: a tiny drain batch
+    (many chunks, interleaved with dispatch) and the default batch
+    produce byte-identical databases."""
+    a_profs, a_traces = _mt_run(tmp_path / "a", n_threads=2, batch=None)
+    b_profs, b_traces = _mt_run(tmp_path / "b", n_threads=2, batch=3)
+    da, db_ = str(tmp_path / "dba"), str(tmp_path / "dbb")
+    aggregate(a_profs, da, trace_paths=a_traces)
+    aggregate(b_profs, db_, trace_paths=b_traces)
+    assert_db_identical(db_, da)
+
+
+def test_multithreaded_aggregate_equals_shards_plus_merge(tmp_path):
+    """The exactly-once spine holds over the wait-free path: a one-shot
+    aggregate of two multi-threaded ranks is byte-identical to per-rank
+    shard aggregation + merge_databases, in either shard order."""
+    runs = [_mt_run(tmp_path / f"rank{r}", rank=r, n_threads=2)
+            for r in range(2)]
+    one = str(tmp_path / "one")
+    aggregate([p for ps, _ in runs for p in ps], one,
+              trace_paths=[t for _, ts in runs for t in ts])
+    shards = []
+    for i, (ps, ts) in enumerate(runs):
+        d = str(tmp_path / f"shard{i}")
+        aggregate(ps, d, trace_paths=ts)
+        shards.append(d)
+    merged = str(tmp_path / "merged")
+    merge_databases(shards, merged)
+    assert_db_identical(merged, one)
+    again = str(tmp_path / "again")
+    merge_databases(list(reversed(shards)), again)
+    assert db_bytes(again) == db_bytes(merged)
+
+
+# ---------------------------------------------------------------------------
+# satellite (a): consistent overhead-counter snapshots under load
+# ---------------------------------------------------------------------------
+def test_overhead_counters_consistent_under_hammer(tmp_path):
+    """4 dispatching threads with a deterministic clock make the
+    per-thread counters obey exact linear invariants (tool == 2 * app,
+    app == step * dispatches); concurrent reader threads hammer
+    ``overhead_counters()`` and every snapshot must satisfy them.  The
+    pre-fix dict-increment path tore (tool updated, dispatches not);
+    the single-tuple publish cannot."""
+    step = 250
+    clock = ThreadClock(step=step)
+    prof = Profiler(str(tmp_path / "run"), tracing=False, clock=clock,
+                    unwind=False)
+    n_threads, n_disp = 4, 4000
+    done = threading.Event()
+    violations = []
+
+    def reader():
+        while not done.is_set():
+            c = prof.overhead_counters()
+            if c["tool_ns"] != 2 * c["app_ns"] or \
+                    c["app_ns"] != step * c["dispatches"]:
+                violations.append(dict(c))
+
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    for t in readers:
+        t.start()
+
+    def worker(i):
+        prof.bind_thread(i)
+        clock.bind(i)
+        for _ in range(n_disp):
+            with prof.dispatch("kernel", "k", stream=0):
+                pass
+
+    with prof:
+        try:
+            _run_threads(n_threads, worker)
+        finally:
+            done.set()
+            for t in readers:
+                t.join()
+    assert not violations, violations[:3]
+    c = prof.overhead_counters()
+    assert c["dispatches"] == n_threads * n_disp
+    assert c["tool_ns"] == 2 * c["app_ns"]
+    assert c["app_ns"] == step * c["dispatches"]
+
+
+def test_bind_thread_contract(tmp_path):
+    prof = Profiler(str(tmp_path / "run"), tracing=False)
+    prof.bind_thread(3)
+    with pytest.raises(ValueError):
+        prof.bind_thread(-1)
+    results = {}
+
+    def other():
+        try:
+            prof.bind_thread(3)          # already taken by main thread
+        except ValueError as e:
+            results["err"] = e
+
+    t = threading.Thread(target=other)
+    t.start()
+    t.join()
+    assert "err" in results
+    # binding after the first dispatch is an error (the lane already
+    # keyed draws and trace rows)
+    with prof:
+        with prof.dispatch("kernel", "k", stream=0):
+            pass
+        with pytest.raises(RuntimeError):
+            prof.bind_thread(7)
+
+
+# ---------------------------------------------------------------------------
+# KeyedRng: the state-swap pin and drain-order-invariant draws
+# ---------------------------------------------------------------------------
+def _philox_key(seed, lane, seq):
+    # explicit uint64: a plain int list goes through an int64 cast in
+    # numpy and mangles keys above 2**63
+    return np.array([seed, ((lane & 0xFFFF) << 48) | (seq & ((1 << 48) - 1))],
+                    np.uint64)
+
+
+def test_keyed_rng_state_swap_matches_fresh_construction():
+    """``KeyedRng.keyed`` re-keys one Philox bit generator in place; the
+    resulting state must be indistinguishable from constructing
+    ``Generator(Philox(key=...))`` fresh (the claim the sampling-module
+    docstring makes).  Draw first so the swapped state starts from a
+    dirty buffer — the case the buffer_pos reset must handle."""
+    kr = KeyedRng(42)
+    kr.keyed(9, 9).random(3)             # dirty the shared buffer
+    for lane, seq in ((0, 0), (3, 17), (65535, (1 << 48) - 1)):
+        g = kr.keyed(lane, seq)
+        fresh = np.random.Generator(
+            np.random.Philox(key=_philox_key(42, lane, seq)))
+        s, f = g.bit_generator.state, fresh.bit_generator.state
+        np.testing.assert_array_equal(s["state"]["key"],
+                                      f["state"]["key"])
+        np.testing.assert_array_equal(s["state"]["counter"],
+                                      f["state"]["counter"])
+        assert (s["buffer_pos"], s["has_uint32"], s["uinteger"]) == \
+            (f["buffer_pos"], f["has_uint32"], f["uinteger"])
+        # stale buffer words are dead with buffer_pos at the refill
+        # mark: the drawn streams are identical
+        np.testing.assert_array_equal(g.random(8), fresh.random(8))
+
+
+def test_dispatch_stream_deterministic_and_positioned():
+    a, b = KeyedRng(7), KeyedRng(7)
+    sa = a.stream(2, 100)
+    first = sa.random(4)
+    second = sa.random(4)
+    assert not np.array_equal(first, second)   # position advances
+    sb = b.stream(2, 100)
+    np.testing.assert_array_equal(sb.random(4), first)
+    np.testing.assert_array_equal(sb.random(4), second)
+    # re-keying resets the position; other keys differ
+    np.testing.assert_array_equal(a.stream(2, 100).random(4), first)
+    assert not np.array_equal(a.stream(2, 101).random(4), first)
+    assert not np.array_equal(a.stream(3, 100).random(4), first)
+    assert not np.array_equal(KeyedRng(8).stream(2, 100).random(4), first)
+    # scalar and vector paths are the same stream
+    s1 = a.stream(2, 100)
+    s2 = b.stream(2, 100)
+    got = np.concatenate([s1.random(1), s1.random(1), s1.random(2)])
+    np.testing.assert_array_equal(got, s2.random(4))
+    assert ((got >= 0) & (got < 1)).all()
+
+
+def test_dispatch_stream_multinomial_both_paths():
+    p = np.array([0.7, 0.2, 0.1])
+    kr = KeyedRng(5)
+    small = kr.stream(0, 1).multinomial(_SMALL_DRAW, p)
+    assert small.sum() == _SMALL_DRAW
+    np.testing.assert_array_equal(
+        small, KeyedRng(5).stream(0, 1).multinomial(_SMALL_DRAW, p))
+    big = kr.stream(0, 2).multinomial(10_000, p)
+    assert big.sum() == 10_000
+    # the big draw is the real keyed Philox multinomial
+    fresh = np.random.Generator(np.random.Philox(key=_philox_key(5, 0, 2)))
+    np.testing.assert_array_equal(big, fresh.multinomial(10_000, p))
+    assert abs(big[0] / 10_000 - 0.7) < 0.05
+
+
+def test_deferred_draw_invariant_under_drain_order():
+    """The monitor may drain dispatches in any interleaving; the drawn
+    samples for a given (lane, seq) must not change.  Runs the same key
+    set through two KeyedRngs in opposite orders, both draw paths."""
+    mod_a, mod_b = bound_module(), bound_module()
+    kr_a, kr_b = KeyedRng(11), KeyedRng(11)
+    keys = [(0, 3), (1, 0), (0, 4), (2, 9), (1, 1)]
+    budgets = [1, 7, _SMALL_DRAW + 20, 2, 5]
+    got_a = {k: sampling.draw_samples(mod_a, n, kr_a.stream(*k))
+             for k, n in zip(keys, budgets)}
+    got_b = {k: sampling.draw_samples(mod_b, n, kr_b.stream(*k))
+             for k, n in zip(reversed(keys), reversed(budgets))}
+    assert got_a == got_b
+    for k, n in zip(keys, budgets):
+        assert sum(s.count for s in got_a[k]) == n   # budget exact
+
+
+def test_draw_samples_small_path_matches_distribution():
+    """The small-budget inverse-CDF draw must produce the same marginal
+    distribution as the multinomial it replaces: over many keyed draws
+    the empirical op frequencies converge to the modeled weights."""
+    mod = bound_module()
+    w, _stall = sampling.op_weights(mod)
+    p = w / w.sum()
+    kr = KeyedRng(123)
+    counts = np.zeros(len(p))
+    n_draws, budget = 2000, 4
+    for seq in range(n_draws):
+        for s in sampling.draw_samples(mod, budget, kr.stream(0, seq)):
+            # interior leaves fold back onto their op for the marginal
+            counts[s.op_index] += s.count
+    freq = counts / counts.sum()
+    np.testing.assert_allclose(freq, p, atol=0.02)

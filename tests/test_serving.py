@@ -19,7 +19,7 @@ import pytest
 from repro.core.aggregate import aggregate
 from repro.core.merge import merge_databases
 from repro.fleet.client import (DirectoryTransport, ShardProducer,
-                                SocketTransport)
+                                SocketTransport, TransportError)
 from repro.fleet.daemon import FleetDaemon, SocketIngest
 from repro.serving.governor import (GovernorConfig, LEVELS,
                                     OverheadGovernor)
@@ -292,6 +292,108 @@ def test_governor_converges_under_real_load(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# SLO shed (ISSUE 10 satellite): p99 degradation beats the budget check
+# ---------------------------------------------------------------------------
+def test_governor_slo_sheds_under_budget():
+    """Windows are comfortably under budget, but the serving p99 blows
+    past the rolling baseline: the governor must shed anyway, keep
+    shedding while degraded, never let the incident poison the
+    baseline, and refuse to raise fidelity until the p99 recovers."""
+    prof, gov = make_gov()
+    for _ in range(3):                   # healthy windows seed the EMA
+        prof.window(4, 0.01)
+        gov.observe(p99_ms=10.0)
+    assert gov.level == 0 and gov.slo_baseline_ms == pytest.approx(10.0)
+    prof.window(4, 0.01)                 # under budget, p99 3x baseline
+    gov.observe(p99_ms=30.0)
+    assert gov.level == 1 and gov.slo_sheds == 1 and gov.slo_degraded
+    prof.window(4, 0.01)                 # still degraded: keeps shedding
+    gov.observe(p99_ms=30.0)
+    assert gov.level == 2 and gov.slo_sheds == 2
+    assert gov.slo_baseline_ms == pytest.approx(10.0)   # unpoisoned
+    st = gov.state()
+    assert st["slo_degraded"] and st["slo_sheds"] == 2
+    assert st["slo_baseline_ms"] == pytest.approx(10.0)
+
+
+def test_governor_slo_recovery_restores_step_up():
+    prof, gov = make_gov()
+    for _ in range(2):
+        prof.window(4, 0.01)
+        gov.observe(p99_ms=10.0)
+    prof.window(4, 0.01)
+    gov.observe(p99_ms=40.0)             # shed to 1
+    # degraded blocks step-up even through low windows with no p99
+    # signal (the verdict stands until a healthy p99 clears it)
+    for _ in range(3):
+        prof.window(4, 0.01)
+        gov.observe()
+    assert gov.level == min(1 + 3, FLOOR)         # kept shedding, never rose
+    level_during_incident = gov.level
+    # recovery: healthy p99 clears the flag; patience applies as usual
+    prof.window(4, 0.01)
+    gov.observe(p99_ms=10.0)
+    assert not gov.slo_degraded and gov.level == level_during_incident
+    prof.window(4, 0.01)
+    gov.observe(p99_ms=10.0)             # low streak == patience: step up
+    assert gov.level == level_during_incident - 1
+
+
+def test_governor_slo_converges_to_floor_under_persistent_degradation():
+    """Convergence: a p99 that stays degraded regardless of fidelity
+    walks the ladder to the floor and holds there — it never oscillates
+    back up and never steps below the floor."""
+    prof, gov = make_gov()
+    prof.window(4, 0.01)
+    gov.observe(p99_ms=10.0)             # baseline
+    levels = []
+    for _ in range(3 * len(LEVELS)):
+        prof.window(4, 0.01)
+        gov.observe(p99_ms=100.0)
+        levels.append(gov.level)
+    assert gov.level == FLOOR
+    assert levels == sorted(levels)      # monotone walk down, no hunting
+    assert gov.slo_baseline_ms == pytest.approx(10.0)
+    # identical hysteresis: the budget path's counters are untouched
+    assert gov.throttle_ups == 0
+
+
+def test_governor_slo_baseline_tracks_slow_drift():
+    """A gradual p99 drift inside the degradation band is the new
+    normal: the EMA follows it and no shed fires."""
+    prof, gov = make_gov()
+    p99 = 10.0
+    for _ in range(10):
+        prof.window(4, 0.2)              # over budget: sheds on budget
+        gov.observe(p99_ms=p99)
+        p99 *= 1.1                       # EMA lag keeps p99/baseline < 1.5
+    assert gov.slo_sheds == 0
+    assert gov.slo_baseline_ms > 10.0
+
+
+def test_governor_p99_none_is_pure_budget_control():
+    """No latency signal ever: behavior is the pre-SLO control law."""
+    prof, gov = make_gov()
+    prof.window(4, 0.5)
+    gov.observe()
+    assert gov.level == 1 and gov.slo_sheds == 0
+    assert gov.slo_baseline_ms is None
+    for _ in range(2):
+        prof.window(4, 0.01)
+        gov.observe()
+    assert gov.level == 0
+
+
+def test_governor_config_validates_slo_knobs():
+    with pytest.raises(ValueError):
+        GovernorConfig(slo_degradation=0.0)
+    with pytest.raises(ValueError):
+        GovernorConfig(slo_alpha=0.0)
+    with pytest.raises(ValueError):
+        GovernorConfig(slo_alpha=1.5)
+
+
+# ---------------------------------------------------------------------------
 # ServingStats
 # ---------------------------------------------------------------------------
 def test_serving_stats_rolling_window():
@@ -428,6 +530,57 @@ def test_socket_backpressure_poll(tmp_path):
         assert producer.poll_backpressure() is False
     finally:
         listener.stop()
+
+
+def test_stage_outbox_fill_sheds_daemonless(tmp_path):
+    """Regression (ISSUE 10 satellite): a producer that only *stages* —
+    no deliver loop, no daemon, no explicit poll — must still see its
+    own outbox filling, so the governor sheds before the exporter keeps
+    writing full-fidelity measurements into a pipe nothing drains."""
+    class DeadTransport:                 # no poll_status, send never works
+        def send(self, path):
+            raise TransportError("daemon is gone")
+
+    src = tmp_path / "db"
+    src.mkdir()
+    (src / "meta.json").write_text("{}")
+    producer = ShardProducer(str(tmp_path / "outbox"), DeadTransport(),
+                             spool_soft=2, sleep=lambda s: None)
+    gov = OverheadGovernor(StubProfiler(), GovernorConfig(budget=0.10))
+    for e in range(4):
+        (src / "payload.bin").write_bytes(b"x%d" % e)   # distinct shards
+        producer.stage(str(src), epoch=e)
+        gov.note_backpressure(producer.throttled)
+    assert producer.throttled            # 4 spooled > soft bound 2
+    assert gov.level == 1 and gov.throttle_downs == 1
+
+
+def test_stage_polls_daemon_backpressure(tmp_path):
+    """The bugfix proper: ``stage()`` must call ``poll_backpressure``
+    (not just the local bound check), so a stage-only producer observes
+    the *daemon's* backlog the moment it enqueues."""
+    class CountingTransport:
+        def __init__(self):
+            self.polls = 0
+
+        def send(self, path):
+            raise TransportError("unused")
+
+        def poll_status(self):
+            self.polls += 1
+            return {"spool_depth": 7}
+
+    src = tmp_path / "db"
+    src.mkdir()
+    (src / "meta.json").write_text("{}")
+    transport = CountingTransport()
+    producer = ShardProducer(str(tmp_path / "outbox"), transport,
+                             spool_soft=32, daemon_spool_soft=3,
+                             sleep=lambda s: None)
+    producer.stage(str(src), epoch=0)
+    assert transport.polls == 1          # polled on the enqueue itself
+    assert producer.daemon_backpressured and producer.throttled
+    assert producer.daemon_spool_depth == 7
 
 
 # ---------------------------------------------------------------------------
